@@ -1,0 +1,54 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp oracle.
+
+On this CPU container interpret-mode timings measure the Python emulation,
+not TPU performance — the CSV documents call latency + the (shape, VMEM)
+choices; TPU timing comes from running the same ops on hardware.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.kernels.ops import (build_csc_plan, flash_attention_op,
+                               segment_sum_op, wkv6_op)
+from repro.kernels.ref import mha_ref, segment_sum_ref, wkv6_ref
+
+
+def kernels():
+    rng = np.random.default_rng(0)
+    # segment sum: GNN aggregation hot spot (Fig. A3: 76% of runtime)
+    E, N, D = 20000, 4000, 128
+    ids = rng.integers(0, N, E).astype(np.int32)
+    data = jnp.asarray(rng.normal(size=(E, D)), jnp.float32)
+    plan = build_csc_plan(ids, N)
+    us = time_call(lambda d: segment_sum_op(d, plan, interpret=True), data,
+                   iters=2)
+    us_ref = time_call(
+        lambda d: segment_sum_ref(d, jnp.asarray(ids), N), data, iters=2)
+    emit("kernels/segment_sum_pallas_interp", us,
+         f"E={E};N={N};D={D};jnp_ref_us={us_ref:.0f}")
+
+    # wkv6
+    B, T, H, K = 1, 256, 4, 64
+    r = jnp.asarray(rng.normal(size=(B, T, H, K)) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, H, K)) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, H, K)), jnp.float32)
+    w = jnp.asarray(0.6 + 0.39 * rng.random((B, T, H, K)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, K)) * 0.2, jnp.float32)
+    us = time_call(lambda *a: wkv6_op(*a, chunk=64, interpret=True),
+                   r, k, v, w, u, iters=2)
+    us_ref = time_call(lambda *a: wkv6_ref(*a)[0], r, k, v, w, u, iters=2)
+    emit("kernels/wkv6_pallas_interp", us,
+         f"T={T};H={H};K={K};scan_ref_us={us_ref:.0f}")
+
+    # flash attention
+    B, T, Hh, Dh = 1, 512, 4, 64
+    q = jnp.asarray(rng.normal(size=(B, T, Hh, Dh)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(B, T, Hh, Dh)), jnp.float32)
+    vv = jnp.asarray(rng.normal(size=(B, T, Hh, Dh)), jnp.float32)
+    us = time_call(lambda *a: flash_attention_op(
+        *a, block_q=128, block_k=128, interpret=True), q, kk, vv, iters=2)
+    us_ref = time_call(lambda *a: mha_ref(*a), q, kk, vv, iters=2)
+    emit("kernels/flash_attention_pallas_interp", us,
+         f"T={T};H={Hh};D={Dh};dense_ref_us={us_ref:.0f}")

@@ -1,0 +1,41 @@
+"""§Roofline: render the per-(arch × shape × mesh) roofline table from the
+dry-run artifacts in results/dryrun_*/ (produced by repro.launch.dryrun)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS_GLOBS = ("results/dryrun_single/*.json", "results/dryrun_multi/*.json",
+                 "results/perf/*.json")
+
+
+def roofline_table():
+    files = []
+    for pat in RESULTS_GLOBS:
+        files.extend(sorted(glob.glob(pat)))
+    if not files:
+        emit("roofline/NO_ARTIFACTS", 0.0,
+             "run repro.launch.dryrun --all --out results/dryrun_single")
+        return
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        tag = rec.get("tag", os.path.basename(f))
+        if rec["status"] == "skip":
+            emit(f"roofline/{tag}", 0.0, f"SKIP:{rec['reason']}")
+            continue
+        if rec["status"] == "error":
+            emit(f"roofline/{tag}", 0.0, f"ERROR:{rec['error'][:80]}")
+            continue
+        t_total = max(rec["t_compute_s"], rec["t_memory_s"],
+                      rec["t_collective_s"])
+        emit(f"roofline/{tag}", t_total * 1e6,
+             f"t_compute={rec['t_compute_s']:.4e};"
+             f"t_memory={rec['t_memory_s']:.4e};"
+             f"t_collective={rec['t_collective_s']:.4e};"
+             f"dominant={rec['dominant']};"
+             f"useful_flops_ratio={rec['useful_flops_ratio']:.3f};"
+             f"mem_GiB={rec['memory_per_device_bytes'] / 2**30:.2f}")

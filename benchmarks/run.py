@@ -1,0 +1,52 @@
+"""Benchmark driver — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §6 for the mapping
+to the paper's tables)."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer training steps")
+    args = ap.parse_args(argv)
+
+    from benchmarks import gnn_tables, gnn_scaling, kernels_bench, \
+        roofline_table
+
+    steps = 30 if args.fast else 60
+    benches = {
+        "table2": lambda: gnn_tables.table2_citation_accuracy(steps),
+        "table3": lambda: gnn_tables.table3_strategies_accuracy(steps),
+        "table4": lambda: gnn_tables.table4_strategy_tradeoffs(steps),
+        "tableA2": lambda: gnn_tables.tableA2_gat_accuracy(steps),
+        "fig8": gnn_scaling.fig8_scaling,
+        "fig9": gnn_scaling.fig9_redundancy,
+        "table5": gnn_scaling.table5_sampling_cost,
+        "fig10": gnn_scaling.fig10_partitioning,
+        "figA3": gnn_scaling.figA3_stage_breakdown,
+        "appB": lambda: gnn_scaling.appB_halo_ablation(steps),
+        "kernels": kernels_bench.kernels,
+        "roofline": roofline_table.roofline_table,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+            import traceback
+            traceback.print_exc()
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

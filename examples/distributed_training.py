@@ -1,0 +1,92 @@
+"""End-to-end driver: distributed GNN training the way the paper runs it —
+a worker group (8 simulated workers here; 1,024 in the paper) jointly
+computes every batch of an edge-attributed power-law "Alipay-like" graph
+with the in-house GAT-E model, under all three training strategies.
+
+    PYTHONPATH=src python examples/distributed_training.py [--steps 200]
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.config import GNNConfig
+from repro.core.clustering import label_propagation_clusters
+from repro.core.engine import HybridParallelEngine
+from repro.core.mpgnn import accuracy_block
+from repro.core.partition import build_partitions, partition_stats
+from repro.core.strategies import (cluster_batch_views, global_batch_view,
+                                   mini_batch_views, shard_view)
+from repro.graph import make_dataset
+from repro.models import make_gnn
+from repro.optim import adam
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--nodes", type=int, default=8000)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--partition", default="1d_src",
+                    choices=["1d_src", "1d_dst", "vertex_cut"])
+    args = ap.parse_args()
+
+    g = make_dataset("alipay_like", num_nodes=args.nodes, seed=0)
+    print(f"graph: {g.num_nodes} nodes, {g.num_edges} edges, "
+          f"{g.edge_features.shape[1]} edge attrs, "
+          f"max degree {g.in_degree().max()}")
+
+    cfg = GNNConfig(model="gat_e", num_layers=2, hidden_dim=32,
+                    num_classes=2, feature_dim=g.node_features.shape[1],
+                    edge_feature_dim=g.edge_features.shape[1], num_heads=4)
+    model = make_gnn(cfg)
+
+    sg = build_partitions(g, args.workers, method=args.partition,
+                          gcn_norm=False)
+    print("partition stats:", partition_stats(sg))
+    engine = HybridParallelEngine(model, sg)
+
+    clusters = label_propagation_clusters(
+        g, max_cluster_size=max(200, g.num_nodes // 20), seed=0)
+    strategies = {
+        "global": iter(lambda: global_batch_view(g, 2), None),
+        "mini": mini_batch_views(g, 2, batch_nodes=g.num_nodes // 50,
+                                 seed=0),
+        "cluster": cluster_batch_views(
+            g, 2, clusters, clusters_per_batch=max(
+                1, (int(clusters.max()) + 1) // 20), halo_hops=1, seed=0),
+    }
+
+    steps_per = max(1, args.steps // 3)
+    params = model.init(jax.random.PRNGKey(0), cfg.feature_dim)
+    opt = adam(5e-3)
+    opt_state = opt.init(params)
+    step_fn = engine.make_train_step(opt)
+    infer = engine.make_infer()
+
+    for name, views in strategies.items():
+        t0 = time.perf_counter()
+        for i in range(steps_per):
+            view = next(views)
+            params, opt_state, loss = step_fn(params, opt_state,
+                                              shard_view(sg.plan, view))
+        wall = time.perf_counter() - t0
+        # distributed inference through the same engine (paper §4.3)
+        logits = infer(params, {**shard_view(
+            sg.plan, global_batch_view(g, 2))})
+        preds = engine.gather_predictions(np.asarray(logits))
+        test = g.test_mask
+        acc = float((preds.argmax(-1)[test] == g.labels[test]).mean())
+        print(f"[{name:8s}] {steps_per} steps, {wall:.1f}s "
+              f"({wall / steps_per * 1e3:.0f} ms/step), "
+              f"loss {float(loss):.4f}, test acc {acc:.4f}")
+    print("done: one engine, three strategies, unified train+infer.")
+
+
+if __name__ == "__main__":
+    main()

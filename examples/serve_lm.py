@@ -1,0 +1,66 @@
+"""Batched LM serving: prefill a batch of prompts, decode with a KV cache
+(rolling O(window) cache for the sliding-window arch). Uses the reduced
+mixtral-8x7b config so it runs on CPU; the identical code path serves the
+full config on a pod via launch/dryrun's serve_step sharding.
+
+    PYTHONPATH=src python examples/serve_lm.py [--new-tokens 32]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.arch import build_model
+from repro.config import get_arch_config
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_arch_config(args.arch).reduced().replace(
+        dtype="float32", sliding_window=16)
+    model = build_model(cfg, remat=False, rolling_window_decode=True)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B, P, N = args.batch, args.prompt_len, args.new_tokens
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P)),
+                          jnp.int32)
+
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len=P + N))
+    decode = jax.jit(model.decode_step)
+
+    t0 = time.perf_counter()
+    logits, caches, idx = prefill(params, {"tokens": prompts})
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    generated = [jnp.argmax(logits[:, -1], -1)]
+    t0 = time.perf_counter()
+    for _ in range(N):
+        tok = generated[-1][:, None]
+        logits, caches, idx = decode(params, {"tokens": tok}, caches, idx)
+        generated.append(jnp.argmax(logits[:, -1], -1))
+    jax.block_until_ready(generated[-1])
+    t_decode = time.perf_counter() - t0
+
+    toks = jnp.stack(generated[1:], axis=1)
+    print(f"arch={args.arch} (reduced)  batch={B}  prompt={P}  new={N}")
+    print(f"prefill: {t_prefill * 1e3:.1f} ms "
+          f"({B * P / t_prefill:.0f} tok/s)")
+    print(f"decode : {t_decode * 1e3:.1f} ms total, "
+          f"{t_decode / N * 1e3:.2f} ms/step, "
+          f"{B * N / t_decode:.0f} tok/s")
+    print(f"sample continuation (seq 0): {np.asarray(toks[0])[:16]}")
+    print(f"rolling SWA cache: window={cfg.sliding_window} slots "
+          f"(O(window), not O(seq))")
+
+
+if __name__ == "__main__":
+    main()

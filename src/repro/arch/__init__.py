@@ -1,0 +1,5 @@
+from repro.arch.model import TransformerLM, build_model, layer_kinds
+from repro.arch.hints import use_hints, shard_hint
+
+__all__ = ["TransformerLM", "build_model", "layer_kinds", "use_hints",
+           "shard_hint"]

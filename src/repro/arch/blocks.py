@@ -1,0 +1,207 @@
+"""Transformer blocks shared by the assigned architectures.
+
+One ``block_init/block_apply`` pair covers: dense SwiGLU decoders (qwen3,
+phi3), GQA w/ qk-norm, sliding-window (mixtral), MoE FFN (dbrx, mixtral,
+jamba), MLA (minicpm3), Mamba mixer (jamba), RWKV-6 (rwkv6), enc-dec with
+cross-attention (whisper), and M-RoPE (qwen2-vl). The kind of each layer is
+static config; caches are explicit pytrees.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.nn.layers import (
+    rmsnorm_init, rmsnorm_apply, layernorm_init, layernorm_apply,
+    swiglu_init, swiglu_apply, gelu_mlp_init, gelu_mlp_apply,
+)
+from repro.nn.attention import attention_init, attention_apply, mla_init, \
+    mla_apply
+from repro.arch.moe import moe_init, moe_ffn_dense, moe_ffn_ep
+from repro.arch.mamba import mamba_init, mamba_apply, mamba_init_cache
+from repro.arch.rwkv6_block import (
+    rwkv_time_init, rwkv_time_apply, rwkv_channel_init, rwkv_channel_apply,
+    rwkv_init_cache,
+)
+from repro.arch.hints import shard_hint
+
+
+def _norm_init(cfg: ArchConfig, dtype):
+    if getattr(cfg, "norm_type", "rmsnorm") == "layernorm":
+        return layernorm_init(cfg.d_model, dtype)
+    return rmsnorm_init(cfg.d_model, dtype)
+
+
+def norm_apply(cfg: ArchConfig, p, x):
+    if "bias" in p:
+        return layernorm_apply(p, x, cfg.norm_eps)
+    return rmsnorm_apply(p, x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# block init
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg: ArchConfig, kind: str, dtype,
+               cross_attention: bool = False, use_moe: bool = True):
+    """kind: "attn" | "mamba" | "rwkv". ``use_moe``: whether THIS layer's
+    FFN is MoE (jamba puts MoE on every moe_every-th layer only)."""
+    ks = jax.random.split(key, 6)
+    moe_here = cfg.moe is not None and use_moe
+    p: dict = {"norm1": _norm_init(cfg, dtype)}
+    if kind == "attn":
+        if cfg.mla is not None:
+            p["attn"] = mla_init(ks[0], cfg.d_model, cfg.num_heads, cfg.mla,
+                                 dtype)
+        else:
+            p["attn"] = attention_init(
+                ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.resolved_head_dim, dtype, qk_norm=cfg.qk_norm)
+        if cross_attention:
+            p["norm_x"] = _norm_init(cfg, dtype)
+            p["xattn"] = attention_init(
+                ks[1], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.resolved_head_dim, dtype)
+        p["norm2"] = _norm_init(cfg, dtype)
+        if moe_here:
+            p["ffn"] = moe_init(ks[2], cfg.d_model, cfg.d_ff,
+                                cfg.moe.num_experts, dtype)
+        elif getattr(cfg, "norm_type", "rmsnorm") == "layernorm":
+            p["ffn"] = gelu_mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype)
+        else:
+            p["ffn"] = swiglu_init(ks[2], cfg.d_model, cfg.d_ff, dtype)
+    elif kind == "mamba":
+        p["mixer"] = mamba_init(ks[0], cfg.d_model, cfg.mamba, dtype)
+        p["norm2"] = _norm_init(cfg, dtype)
+        if moe_here:
+            p["ffn"] = moe_init(ks[2], cfg.d_model, cfg.d_ff,
+                                cfg.moe.num_experts, dtype)
+        else:
+            p["ffn"] = swiglu_init(ks[2], cfg.d_model, cfg.d_ff, dtype)
+    elif kind == "rwkv":
+        p["time"] = rwkv_time_init(ks[0], cfg.d_model, cfg.rwkv, dtype)
+        p["norm2"] = _norm_init(cfg, dtype)
+        p["channel"] = rwkv_channel_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def block_cache_init(cfg: ArchConfig, kind: str, batch: int, cache_len: int,
+                     dtype, rolling: bool = False):
+    """Decode cache for one block of the given kind."""
+    if kind == "attn":
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {"c_kv": jnp.zeros((batch, cache_len, m.kv_lora_rank),
+                                      dtype),
+                    "k_rope": jnp.zeros((batch, cache_len,
+                                         m.qk_rope_head_dim), dtype)}
+        hd = cfg.resolved_head_dim
+        c = {"k": jnp.zeros((batch, cache_len, cfg.num_kv_heads, hd), dtype),
+             "v": jnp.zeros((batch, cache_len, cfg.num_kv_heads, hd), dtype)}
+        if rolling:
+            c["pos"] = jnp.full((cache_len,), -1, jnp.int32)
+        return c
+    if kind == "mamba":
+        return mamba_init_cache(None, batch, cfg.mamba, cfg.d_model, dtype)
+    if kind == "rwkv":
+        return rwkv_init_cache(batch, cfg.d_model, cfg.rwkv, dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# block apply
+# ---------------------------------------------------------------------------
+
+
+def _ffn_apply(p_ffn, x, cfg: ArchConfig, moe_impl: str, mesh):
+    if cfg.moe is not None and "router" in p_ffn:
+        if moe_impl == "ep" and mesh is not None:
+            dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+            return moe_ffn_ep(p_ffn, x, cfg.moe, mesh, axis="model",
+                              dp_axis=dp)
+        return moe_ffn_dense(p_ffn, x, cfg.moe)
+    if "wi" in p_ffn:                       # gelu mlp (whisper)
+        return gelu_mlp_apply(p_ffn, x), jnp.zeros((), jnp.float32)
+    return swiglu_apply(p_ffn, x), jnp.zeros((), jnp.float32)
+
+
+def block_apply(p, x, cfg: ArchConfig, kind: str, *,
+                positions=None, mrope_positions=None, causal=True,
+                cache=None, cache_index=None, enc_memory=None,
+                moe_impl: str = "dense", mesh=None,
+                sliding_window: Optional[int] = None):
+    """Pre-norm residual block. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    sw = cfg.sliding_window if sliding_window is None else sliding_window
+    new_cache = None
+
+    if kind == "attn":
+        h = norm_apply(cfg, p["norm1"], x)
+        h = shard_hint(h, "batch", "seq", None)
+        if cfg.mla is not None:
+            if cache is not None:
+                a, c_attn = mla_apply(
+                    p["attn"], h, num_heads=cfg.num_heads, mla=cfg.mla,
+                    positions=positions, rope_theta=cfg.rope_theta,
+                    norm_eps=cfg.norm_eps, cache=cache, cache_index=cache_index)
+            else:
+                a = mla_apply(p["attn"], h, num_heads=cfg.num_heads,
+                              mla=cfg.mla, positions=positions,
+                              rope_theta=cfg.rope_theta,
+                              norm_eps=cfg.norm_eps)
+                c_attn = None
+        else:
+            out = attention_apply(
+                p["attn"], h, num_heads=cfg.num_heads,
+                num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, positions=positions,
+                rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+                norm_eps=cfg.norm_eps, causal=causal, sliding_window=sw,
+                cache=cache, cache_index=cache_index,
+                mrope_positions=mrope_positions)
+            a, c_attn = out if cache is not None else (out, None)
+        x = x + a
+        if enc_memory is not None:
+            hx = norm_apply(cfg, p["norm_x"], x)
+            x = x + attention_apply(
+                p["xattn"], hx, num_heads=cfg.num_heads,
+                num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, kv_x=enc_memory,
+                causal=False)
+        h2 = norm_apply(cfg, p["norm2"], x)
+        h2 = shard_hint(h2, "batch", "seq", None)
+        f, aux = _ffn_apply(p["ffn"], h2, cfg, moe_impl, mesh)
+        x = x + f
+        new_cache = c_attn
+
+    elif kind == "mamba":
+        h = norm_apply(cfg, p["norm1"], x)
+        m, c_m = mamba_apply(p["mixer"], h, cfg.mamba, cache=cache)
+        x = x + m
+        h2 = norm_apply(cfg, p["norm2"], x)
+        f, aux = _ffn_apply(p["ffn"], h2, cfg, moe_impl, mesh)
+        x = x + f
+        new_cache = c_m
+
+    elif kind == "rwkv":
+        h = norm_apply(cfg, p["norm1"], x)
+        t, c_t = rwkv_time_apply(p["time"], h, cfg.rwkv, cfg.norm_eps,
+                                 cache=cache["time"] if cache else None)
+        x = x + t
+        h2 = norm_apply(cfg, p["norm2"], x)
+        c, c_c = rwkv_channel_apply(p["channel"], h2,
+                                    cache=cache["channel"] if cache else None)
+        x = x + c
+        new_cache = ({"time": c_t, "channel": c_c}
+                     if cache is not None else None)
+    else:
+        raise ValueError(kind)
+
+    x = shard_hint(x, "batch", "seq", None)
+    return x, new_cache, aux

@@ -1,0 +1,56 @@
+"""Activation-sharding hints, active only when the launcher arms a mesh.
+
+Models call ``shard_hint(x, "batch", "seq", None)`` with logical axis names;
+the launcher maps logical -> mesh axes (GraphTheta-style: one batch is
+computed by the whole worker group — DESIGN.md §5). On a bare CPU (smoke
+tests) hints are no-ops. Non-divisible dims are silently left unsharded.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_RULES: Optional[dict] = None   # logical name -> mesh axis (or tuple)
+_MESH = None
+
+
+@contextlib.contextmanager
+def use_hints(mesh, rules: dict):
+    global _RULES, _MESH
+    prev = (_RULES, _MESH)
+    _RULES, _MESH = rules, mesh
+    try:
+        yield
+    finally:
+        _RULES, _MESH = prev
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def shard_hint(x, *logical):
+    """Constrain x's sharding; logical names resolve through active rules."""
+    if _RULES is None or _MESH is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    spec = []
+    for dim, name in zip(x.shape, logical):
+        axis = _RULES.get(name) if name is not None else None
+        if axis is None:
+            spec.append(None)
+            continue
+        size = _axis_size(_MESH, axis)
+        spec.append(axis if (size > 1 and dim % size == 0) else None)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(_MESH, P(*spec)))

@@ -1,0 +1,187 @@
+"""Selective SSM (Mamba) block — TPU-adapted chunked (SSD-style) scan.
+
+Hardware adaptation (DESIGN.md): Mamba-1's per-(channel,state) decay makes
+the chunked form VPU-bound; following Mamba-2/SSD we use **one scalar decay
+per head per step**, which turns both intra-chunk and state-carry math into
+MXU matmuls. Heads are independent → sharded over the 'model' mesh axis
+(sequence stays unsharded: the chunk scan is a sequential dependency, the
+reason SSMs don't sequence-parallelize — noted in DESIGN.md §5).
+
+Decode is the O(1) recurrence: conv window cache + (H, P, N) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.layers import _fan_in_init
+from repro.arch.hints import shard_hint
+
+
+def mamba_init(key, d_model, mc, dtype):
+    d_in = mc.expand * d_model
+    H = d_in // mc.head_dim
+    dt_rank = mc.dt_rank or max(1, d_model // 16)
+    ks = jax.random.split(key, 6)
+    # A init in [1, H] log-spaced (standard S4/Mamba init), scalar per head
+    a = np.linspace(1.0, 16.0, H).astype(np.float32)
+    return {
+        "in_proj": _fan_in_init(ks[0], (d_model, 2 * d_in), dtype),
+        "conv_w": (jax.random.normal(ks[1], (mc.d_conv, d_in), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": _fan_in_init(ks[2], (d_in, dt_rank + 2 * mc.d_state),
+                               dtype),
+        "dt_proj": _fan_in_init(ks[3], (dt_rank, H), jnp.float32),
+        "dt_bias": jnp.asarray(np.log(np.expm1(
+            np.clip(np.exp(np.random.default_rng(0).uniform(
+                np.log(1e-3), np.log(1e-1), H)), 1e-4, None))),
+            jnp.float32),
+        "A_log": jnp.asarray(np.log(a), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "out_proj": _fan_in_init(ks[4], (d_in, d_model), dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x (B,T,C), w (K,C) depthwise causal conv."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        out = out + pad[:, i:i + x.shape[1], :].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssd_chunked(xh, dt, a_log_cum, Bm, Cm, chunk):
+    """Chunked selective scan — fully parallel over chunks.
+
+    Intra-chunk terms and per-chunk state summaries are batched einsums;
+    the only sequential dependency — the chunk-boundary state recurrence
+    S_j = A_j ⊙ S_{j-1} + B̂_j — is a log-depth ``associative_scan`` over
+    affine maps, not a While loop. (Besides exposing parallelism on the
+    TPU, this keeps XLA's cost model honest: While bodies are costed once
+    regardless of trip count — see DESIGN.md §roofline-methodology.)
+
+    xh: (B,T,H,P)  dt: (B,T,H)  a_log_cum: chunk-local cumsum(log a),
+    Bm, Cm: (B,T,N). Returns y (B,T,H,P) and final state (B,H,P,N).
+    """
+    B_, T, H, P_ = xh.shape
+    N = Bm.shape[-1]
+    nc = T // chunk
+    xc = xh.reshape(B_, nc, chunk, H, P_).astype(jnp.float32)
+    dtc = dt.reshape(B_, nc, chunk, H).astype(jnp.float32)
+    lac = a_log_cum.reshape(B_, nc, chunk, H)
+    Bc = Bm.reshape(B_, nc, chunk, N).astype(jnp.float32)
+    Cc = Cm.reshape(B_, nc, chunk, N).astype(jnp.float32)
+
+    # ---- intra-chunk (parallel over chunks) --------------------------------
+    G = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)              # (B,nc,L,L)
+    diff = lac[:, :, :, None, :] - lac[:, :, None, :, :]   # (B,nc,L,L,H) <=0
+    t_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    u_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = (u_i <= t_i)[None, None, :, :, None]
+    M = jnp.where(causal, jnp.exp(diff), 0.0) * G[..., None] \
+        * dtc[:, :, None, :, :]
+    y = jnp.einsum("bclmh,bcmhp->bclhp", M, xc)
+
+    # ---- per-chunk state summaries ------------------------------------------
+    la_last = lac[:, :, -1, :]                              # (B,nc,H)
+    damp = jnp.exp(la_last[:, :, None, :] - lac)            # (B,nc,L,H)
+    dB = jnp.einsum("bclh,bcln->bclhn", dtc * damp, Bc)
+    Bhat = jnp.einsum("bclhn,bclhp->bchpn", dB, xc)         # (B,nc,H,P,N)
+    A = jnp.exp(la_last)                                    # (B,nc,H)
+
+    # ---- associative scan over affine maps S -> A∘S + B̂ ---------------------
+    def combine(l, r):
+        a1, b1 = l
+        a2, b2 = r
+        return a2 * a1, a2[..., None, None] * b1 + b2
+
+    A_acc, B_acc = jax.lax.associative_scan(combine, (A, Bhat), axis=1)
+    S_final = B_acc[:, -1]                                  # (B,H,P,N)
+    # exclusive prefix: state entering chunk j
+    S_prev = jnp.concatenate(
+        [jnp.zeros_like(B_acc[:, :1]), B_acc[:, :-1]], axis=1)
+
+    # ---- inter-chunk contribution (parallel) ---------------------------------
+    y = y + jnp.exp(lac)[..., None] * jnp.einsum(
+        "bcln,bchpn->bclhp", Cc, S_prev)
+    return y.reshape(B_, T, H, P_), S_final
+
+
+def mamba_apply(p, x, mc, cache=None):
+    """x (B,T,D). cache (decode): {"conv": (B,K-1,d_in), "state": (B,H,P,N)}.
+
+    Returns (out, new_cache_or_None).
+    """
+    B, T, D = x.shape
+    d_in = mc.expand * D
+    H = d_in // mc.head_dim
+    P_ = mc.head_dim
+    N = mc.d_state
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    new_cache = None
+    if cache is None or T > 1:
+        xc = _causal_conv(xi, p["conv_w"], p["conv_b"])
+    else:
+        window = jnp.concatenate([cache["conv"], xi], axis=1)  # (B,K-1+T,d)
+        K = p["conv_w"].shape[0]
+        xc = jnp.einsum("btc,tc->bc", window[:, -K:],
+                        p["conv_w"].astype(jnp.float32))[:, None, :]
+        xc = (xc + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+        new_conv = window[:, -(K - 1):]
+    xc = jax.nn.silu(xc)
+    xc = shard_hint(xc, "batch", None, "heads_flat")
+
+    proj = xc @ p["x_proj"]
+    dt_rank = p["dt_proj"].shape[0]
+    dt_in, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) @ p["dt_proj"]
+                         + p["dt_bias"])                  # (B,T,H)
+    A = -jnp.exp(p["A_log"])                              # (H,) negative
+    log_a = dt * A[None, None, :]                          # (B,T,H) <= 0
+    xh = xc.reshape(B, T, H, P_)
+
+    if cache is None or T > 1:
+        chunk = min(mc.chunk, T)
+        assert T % chunk == 0
+        la_chunklocal = jnp.cumsum(
+            log_a.reshape(B, T // chunk, chunk, H), axis=2
+        ).reshape(B, T, H)
+        y, S = _ssd_chunked(xh, dt, la_chunklocal, Bm, Cm, chunk)
+        if cache is not None:
+            # prefill: cache = final SSM state + conv window tail
+            # (assumes the incoming cache is zero-initialized)
+            K = p["conv_w"].shape[0]
+            tail = jnp.pad(xi, ((0, 0), (max(K - 1 - T, 0), 0), (0, 0)))
+            new_cache = {"conv": tail[:, -(K - 1):], "state": S}
+    else:
+        # one-step recurrence
+        S = cache["state"]                                # (B,H,P,N)
+        a = jnp.exp(log_a[:, 0])                          # (B,H)
+        dB = jnp.einsum("bh,bn->bhn", dt[:, 0], Bm[:, 0].astype(jnp.float32))
+        S = a[:, :, None, None] * S + jnp.einsum(
+            "bhn,bhp->bhpn", dB, xh[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bhpn,bn->bhp", S,
+                       Cm[:, 0].astype(jnp.float32))[:, None]
+        new_cache = {"conv": new_conv, "state": S}
+
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, T, d_in).astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, new_cache
+
+
+def mamba_init_cache(p, batch, mc, d_model, dtype):
+    d_in = mc.expand * d_model
+    H = d_in // mc.head_dim
+    return {
+        "conv": jnp.zeros((batch, mc.d_conv - 1, d_in), dtype),
+        "state": jnp.zeros((batch, H, mc.head_dim, mc.d_state),
+                           jnp.float32),
+    }

@@ -1,0 +1,343 @@
+"""Unified model for all assigned architectures: train / prefill / decode.
+
+Layer stacking uses ``lax.scan`` over parameter stacks so the HLO stays
+small at 40–72 layers (one While loop per homogeneous group). Hybrid archs
+(jamba) scan over *groups*: each group is [attn, mamba × (attn_every-1)];
+the mamba sub-stack is an inner scan. Whisper is a bidirectional encoder
+scan + causal decoder scan with cross-attention.
+
+The ``kind`` of the model's inputs (tokens / precomputed embeddings /
+encoder frames) follows the family; ``repro.launch.dryrun.input_specs``
+builds matching ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ArchConfig
+from repro.nn.layers import embedding_init, rmsnorm_init, layernorm_init, \
+    _fan_in_init
+from repro.arch.blocks import (
+    block_init, block_apply, block_cache_init, norm_apply,
+)
+from repro.arch.hints import shard_hint
+
+LOSS_CHUNK = 512
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def layer_kinds(cfg: ArchConfig):
+    """Static per-layer kind list."""
+    if cfg.rwkv is not None:
+        return ["rwkv"] * cfg.num_layers
+    if cfg.mamba is not None and cfg.attn_every:
+        kinds = []
+        for i in range(cfg.num_layers):
+            kinds.append("attn" if i % cfg.attn_every == 0 else "mamba")
+        return kinds
+    if cfg.mamba is not None:
+        return ["mamba"] * cfg.num_layers
+    return ["attn"] * cfg.num_layers
+
+
+@dataclass
+class TransformerLM:
+    cfg: ArchConfig
+    moe_impl: str = "dense"
+    mesh: Any = None
+    remat: bool = True
+    rolling_window_decode: bool = False   # O(window) SWA decode cache
+    unroll_layers: bool = False   # python loop instead of lax.scan (used by
+    #                               the dry-run cost calibration: While
+    #                               bodies are costed once regardless of
+    #                               trip count, unrolled bodies are exact)
+    remat_policy: str = "full"    # full | dots | none  (§Perf knob)
+    remat_granularity: str = "group"   # group | block: block-level saves
+    #                                    each block input -> backward only
+    #                                    recomputes one block at a time
+
+    # ------------------------------------------------------------------ init
+
+    def _group_structure(self):
+        """(group_kinds, n_groups): layers = group_kinds * n_groups."""
+        cfg = self.cfg
+        kinds = layer_kinds(cfg)
+        if cfg.attn_every and cfg.mamba is not None:
+            g = cfg.attn_every
+            assert cfg.num_layers % g == 0
+            return kinds[:g], cfg.num_layers // g
+        return [kinds[0]], cfg.num_layers
+
+    def init(self, key):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        keys = jax.random.split(key, 8)
+        params: dict = {}
+        if not cfg.embed_inputs:
+            params["embed"] = embedding_init(keys[0], cfg.vocab_size,
+                                             cfg.d_model, dt)
+        else:
+            params["embed"] = embedding_init(keys[0], cfg.vocab_size,
+                                             cfg.d_model, dt)  # lm head use
+        group_kinds, n_groups = self._group_structure()
+
+        if cfg.moe is not None and cfg.moe_every > 1:
+            assert len(group_kinds) % cfg.moe_every == 0, \
+                "group size must divide moe_every for uniform layer scan"
+
+        def init_group(k):
+            ks = jax.random.split(k, len(group_kinds))
+            return [block_init(
+                ks[i], cfg, kind, dt,
+                cross_attention=cfg.cross_attention,
+                use_moe=(cfg.moe_every <= 1
+                         or i % cfg.moe_every == cfg.moe_every - 1))
+                    for i, kind in enumerate(group_kinds)]
+
+        gkeys = jax.random.split(keys[1], n_groups)
+        params["blocks"] = jax.vmap(init_group)(gkeys)
+        if cfg.encoder_layers:
+            enc_cfg = cfg
+            ekeys = jax.random.split(keys[2], cfg.encoder_layers)
+            params["encoder"] = jax.vmap(
+                lambda k: block_init(k, enc_cfg, "attn", dt))(ekeys)
+            params["enc_norm"] = (layernorm_init(cfg.d_model, dt)
+                                  if cfg.norm_type == "layernorm"
+                                  else rmsnorm_init(cfg.d_model, dt))
+        params["final_norm"] = (layernorm_init(cfg.d_model, dt)
+                                if getattr(cfg, "norm_type", "rmsnorm")
+                                == "layernorm"
+                                else rmsnorm_init(cfg.d_model, dt))
+        if not cfg.tie_embeddings:
+            params["lm_head"] = _fan_in_init(
+                keys[3], (cfg.d_model, cfg.vocab_size), dt)
+        return params
+
+    def param_shapes(self, key=None):
+        key = jax.random.PRNGKey(0) if key is None else key
+        return jax.eval_shape(self.init, key)
+
+    # ------------------------------------------------------------- backbone
+
+    def _encoder(self, params, frames):
+        # unrolled python loop (few layers; keeps XLA cost analysis exact)
+        cfg = self.cfg
+        x = frames
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32)[None]
+        for i in range(cfg.encoder_layers):
+            p = jax.tree_util.tree_map(lambda a: a[i], params["encoder"])
+            x, _, _ = block_apply(p, x, cfg, "attn", positions=pos,
+                                  causal=False, moe_impl=self.moe_impl,
+                                  mesh=self.mesh)
+        return norm_apply(cfg, params["enc_norm"], x)
+
+    def _backbone(self, params, x, *, positions, mrope_positions=None,
+                  caches=None, cache_index=None, enc_memory=None,
+                  train: bool = False):
+        """Runs all layer groups. caches: pytree stacked (n_groups, ...) per
+        group slot, or None. Returns (x, new_caches, aux_total)."""
+        cfg = self.cfg
+        group_kinds, n_groups = self._group_structure()
+
+        do_remat = train and self.remat and self.remat_policy != "none"
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if self.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+
+        def one_block(x, p_i, c_i, kind):
+            return block_apply(
+                p_i, x, cfg, kind, positions=positions,
+                mrope_positions=mrope_positions, causal=True,
+                cache=c_i, cache_index=cache_index,
+                enc_memory=enc_memory, moe_impl=self.moe_impl,
+                mesh=self.mesh, sliding_window=cfg.sliding_window)
+
+        block_fns = {}
+        for kind in set(group_kinds):
+            fn = functools.partial(one_block, kind=kind)
+            if do_remat and self.remat_granularity == "block":
+                fn = jax.checkpoint(fn, policy=policy)
+            block_fns[kind] = fn
+
+        def group_apply(x, p_group, c_group):
+            new_cs = []
+            aux = jnp.zeros((), jnp.float32)
+            for i, kind in enumerate(group_kinds):
+                c = None if c_group is None else c_group[i]
+                x, nc, a = block_fns[kind](x, p_group[i], c)
+                new_cs.append(nc)
+                aux = aux + a
+            return x, new_cs, aux
+
+        if do_remat and self.remat_granularity == "group":
+            group_apply = jax.checkpoint(group_apply, policy=policy,
+                                         static_argnums=())
+
+        def scan_body(carry, inp):
+            x, aux = carry
+            if caches is None:
+                p_group = inp
+                x, _, a = group_apply(x, p_group, None)
+                return (x, aux + a), None
+            p_group, c_group = inp
+            x, ncs, a = group_apply(x, p_group, c_group)
+            return (x, aux + a), ncs
+
+        if self.unroll_layers:
+            aux = jnp.zeros((), jnp.float32)
+            new_caches = []
+            take = lambda t, i: jax.tree_util.tree_map(lambda a: a[i], t)
+            for gi in range(n_groups):
+                p_group = take(params["blocks"], gi)
+                c_group = None if caches is None else take(caches, gi)
+                x, ncs, a = group_apply(x, p_group, c_group)
+                aux = aux + a
+                new_caches.append(ncs)
+            if caches is not None:
+                new_caches = jax.tree_util.tree_map(
+                    lambda *xs_: jnp.stack(xs_), *new_caches)
+            else:
+                new_caches = None
+            return x, new_caches, aux
+
+        xs = (params["blocks"] if caches is None
+              else (params["blocks"], caches))
+        (x, aux), new_caches = jax.lax.scan(scan_body,
+                                            (x, jnp.zeros((), jnp.float32)),
+                                            xs)
+        return x, new_caches, aux
+
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        if cfg.embed_inputs:
+            x = batch["embeds"].astype(_dtype(cfg))
+        else:
+            x = params["embed"]["table"][batch["tokens"]]
+        return shard_hint(x, "batch", "seq", None)
+
+    def _logits(self, params, h):
+        cfg = self.cfg
+        table = (params["embed"]["table"].T if cfg.tie_embeddings
+                 else params["lm_head"])
+        logits = h @ table.astype(h.dtype)
+        return shard_hint(logits, "batch", None, "vocab")
+
+    # ------------------------------------------------------------------ loss
+
+    def loss(self, params, batch):
+        """Next-token CE, computed in LOSS_CHUNK-sized sequence chunks so
+        the (B,S,V) logits tensor is never materialized."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.arange(S, dtype=jnp.int32)[None]
+        mrope = batch.get("mrope_positions") if cfg.mrope else None
+        enc_memory = None
+        if cfg.encoder_layers:
+            enc_memory = self._encoder(params, batch["enc_frames"].astype(
+                _dtype(cfg)))
+        h, _, aux = self._backbone(params, x, positions=positions,
+                                   mrope_positions=mrope,
+                                   enc_memory=enc_memory, train=True)
+        h = norm_apply(cfg, params["final_norm"], h)
+        labels = batch["labels"]
+
+        chunk = min(LOSS_CHUNK, S)
+        assert S % chunk == 0
+        nchunk = S // chunk
+        # unrolled python loop: never materializes (B,S,V) logits, and
+        # keeps the lm-head FLOPs visible to XLA cost analysis (a scan
+        # body would be costed once regardless of trip count)
+        total = jnp.zeros((), jnp.float32)
+        for i in range(nchunk):
+            hcc = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, axis=1)
+            ycc = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk,
+                                               axis=1)
+            logits = self._logits(params, hcc).astype(jnp.float32)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, ycc[..., None], axis=-1)[..., 0]
+            total = total + jnp.sum(logz - ll)
+        ce = total / (B * S)
+        lb_coef = cfg.moe.load_balance_coef if cfg.moe is not None else 0.0
+        return ce + lb_coef * aux
+
+    # ------------------------------------------------------------- serving
+
+    def init_cache(self, batch_size: int, cache_len: int):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        group_kinds, n_groups = self._group_structure()
+        rolling = (self.rolling_window_decode and cfg.sliding_window
+                   and cfg.mamba is None)
+        eff_len = (min(cache_len, cfg.sliding_window)
+                   if rolling else cache_len)
+
+        def one_group(_):
+            return [block_cache_init(cfg, kind, batch_size, eff_len, dt,
+                                     rolling=bool(rolling))
+                    for kind in group_kinds]
+
+        return jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[one_group(i) for i in range(n_groups)]) if n_groups > 1 else \
+            jax.tree_util.tree_map(lambda x: x[None], one_group(0))
+
+    def prefill(self, params, batch, cache_len: int):
+        """Full-sequence forward filling the cache; returns (last_logits,
+        caches, next_index)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        B, S, _ = x.shape
+        caches = self.init_cache(B, cache_len)
+        positions = jnp.arange(S, dtype=jnp.int32)[None]
+        mrope = batch.get("mrope_positions") if cfg.mrope else None
+        enc_memory = None
+        if cfg.encoder_layers:
+            enc_memory = self._encoder(
+                params, batch["enc_frames"].astype(_dtype(cfg)))
+        h, new_caches, _ = self._backbone(
+            params, x, positions=positions, mrope_positions=mrope,
+            caches=caches, cache_index=jnp.zeros((), jnp.int32),
+            enc_memory=enc_memory)
+        h = norm_apply(cfg, params["final_norm"], h)
+        logits = self._logits(params, h[:, -1:])
+        return logits, new_caches, jnp.asarray(S, jnp.int32)
+
+    def decode_step(self, params, batch, caches, index):
+        """One-token step. batch: {"tokens": (B,1)} (or embeds for vlm;
+        enc_memory recomputed from enc_frames for whisper)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        positions = index[None, None].astype(jnp.int32)
+        mrope = batch.get("mrope_positions") if cfg.mrope else None
+        enc_memory = None
+        if cfg.encoder_layers:
+            if "enc_memory" in batch:
+                # serving: encoder output computed once at prefill and
+                # carried by the server (avoids per-token recompute)
+                enc_memory = batch["enc_memory"].astype(_dtype(cfg))
+            else:
+                enc_memory = self._encoder(
+                    params, batch["enc_frames"].astype(_dtype(cfg)))
+        h, new_caches, _ = self._backbone(
+            params, x, positions=positions, mrope_positions=mrope,
+            caches=caches, cache_index=index, enc_memory=enc_memory)
+        h = norm_apply(cfg, params["final_norm"], h)
+        logits = self._logits(params, h)
+        return logits, new_caches, index + 1
+
+
+def build_model(cfg: ArchConfig, moe_impl: str = "dense", mesh=None,
+                remat: bool = True,
+                rolling_window_decode: bool = False) -> TransformerLM:
+    return TransformerLM(cfg, moe_impl=moe_impl, mesh=mesh, remat=remat,
+                         rolling_window_decode=rolling_window_decode)

@@ -1,0 +1,94 @@
+"""Checkpointing: flat-key npz of arbitrary pytrees (the paper's master
+manages checkpoints; here the host driver plays the master role).
+
+Layout: <dir>/step_<N>.npz  with keys "path/to/leaf" and a JSON manifest of
+the treedef so structure round-trips exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                rec(f"{prefix}{_SEP}{k}" if prefix else str(k), node[k])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(f"{prefix}{_SEP}{i}" if prefix else str(i), v)
+        else:
+            flat[prefix] = np.asarray(node)
+
+    rec("", tree)
+    return flat
+
+
+def _spec(tree):
+    if isinstance(tree, dict):
+        return {"__kind__": "dict",
+                "items": {k: _spec(v) for k, v in tree.items()}}
+    if isinstance(tree, tuple):
+        return {"__kind__": "tuple", "items": [_spec(v) for v in tree]}
+    if isinstance(tree, list):
+        return {"__kind__": "list", "items": [_spec(v) for v in tree]}
+    return {"__kind__": "leaf"}
+
+
+def _rebuild(spec, flat, prefix=""):
+    kind = spec["__kind__"]
+    if kind == "dict":
+        return {k: _rebuild(v, flat, f"{prefix}{_SEP}{k}" if prefix else k)
+                for k, v in spec["items"].items()}
+    if kind in ("tuple", "list"):
+        seq = [_rebuild(v, flat, f"{prefix}{_SEP}{i}" if prefix else str(i))
+               for i, v in enumerate(spec["items"])]
+        return tuple(seq) if kind == "tuple" else seq
+    return flat[prefix]
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    os.makedirs(directory, exist_ok=True)
+    host_tree = jax.tree_util.tree_map(
+        lambda x: np.asarray(jax.device_get(x)), tree)
+    flat = _flatten(host_tree)
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    tmp = path + ".tmp"
+    np.savez(tmp, __manifest__=np.frombuffer(
+        json.dumps(_spec(host_tree)).encode(), dtype=np.uint8), **flat)
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    return path
+
+
+def load_checkpoint(directory: str, step: Optional[int] = None) -> Any:
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    with np.load(path) as data:
+        manifest = json.loads(bytes(data["__manifest__"]).decode())
+        flat = {k: data[k] for k in data.files if k != "__manifest__"}
+    return _rebuild(manifest, flat)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for f in os.listdir(directory):
+        m = re.match(r"step_(\d+)\.npz$", f)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None

@@ -1,0 +1,2 @@
+# One module per assigned architecture (see repro.config.ASSIGNED_ARCHS)
+# plus the paper's own GNN configurations (gnn_*.py).

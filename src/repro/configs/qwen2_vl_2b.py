@@ -1,0 +1,20 @@
+"""Qwen2-VL-2B — VLM decoder backbone with M-RoPE; the ViT frontend is a
+stub (input_specs supplies precomputed patch+text embeddings and 3-stream
+position ids). [arXiv:2409.12191]"""
+from repro.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151936,
+    mrope=True,
+    embed_inputs=True,        # stub multimodal frontend
+    rope_theta=1000000.0,
+    tie_embeddings=True,
+    source="arXiv:2409.12191",
+)

@@ -1,0 +1,17 @@
+"""Qwen3-32B — dense, qk-norm, GQA. [hf:Qwen/Qwen3-8B family card]"""
+from repro.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=25600,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1000000.0,
+    source="hf:Qwen/Qwen3-8B",
+)

@@ -1,0 +1,18 @@
+# The paper's primary contribution: NN-TGAR + hybrid-parallel distributed
+# graph training engine with flexible training strategies.
+from repro.core.tgar import (
+    TGARLayer, segment_sum, segment_mean, segment_max, segment_softmax,
+)
+from repro.core.mpgnn import MPGNNModel, forward_block, loss_block
+from repro.core.partition import (
+    PartitionPlan, ShardedGraph, build_partitions, partition_stats,
+)
+from repro.core.strategies import (
+    GraphView, global_batch_view, mini_batch_views, cluster_batch_views,
+    shard_view,
+)
+from repro.core.subgraph import khop_subgraph_view, bfs_layers
+from repro.core.clustering import label_propagation_clusters, hash_clusters
+from repro.core.engine import HybridParallelEngine
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,157 @@
+"""Flexible training strategies over the GraphView abstraction (paper §4.2/4.3).
+
+A :class:`GraphView` is "a light-weighted logic view of the global graph":
+per-layer node/edge active masks + a loss mask. The same view drives both
+the single-shard path (``as_block``) and the distributed hybrid-parallel
+engine (``shard_view`` maps global masks onto a PartitionPlan). Global-,
+mini- and cluster-batch are all expressed as views — the unification the
+paper claims as its second contribution.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.graph.csr import Graph, GraphBlock, build_block
+from repro.core.subgraph import khop_subgraph_view
+
+
+@dataclass
+class GraphView:
+    graph: Graph
+    K: int
+    strategy: str
+    node_active: Optional[np.ndarray]    # (K, N) f32 or None (=all)
+    edge_active: Optional[np.ndarray]    # (K, M) f32 or None
+    loss_mask: np.ndarray                # (N,) f32
+    meta: dict
+
+    def as_block(self, gcn_norm: bool = True) -> GraphBlock:
+        block = build_block(self.graph, loss_mask=self.loss_mask > 0,
+                            gcn_norm=gcn_norm)
+        block.node_active = self.node_active
+        block.edge_active = self.edge_active
+        return block
+
+    def active_counts(self) -> dict:
+        n_nodes = (self.graph.num_nodes if self.node_active is None
+                   else int((self.node_active.max(axis=0) > 0).sum()))
+        n_edges = (self.graph.num_edges if self.edge_active is None
+                   else int((self.edge_active.max(axis=0) > 0).sum()))
+        return {"active_nodes": n_nodes, "active_edges": n_edges,
+                "targets": int((self.loss_mask > 0).sum())}
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+
+def global_batch_view(g: Graph, K: int) -> GraphView:
+    """Full graph convolution each step (paper: stable, costliest step)."""
+    loss = (g.train_mask if g.train_mask is not None
+            else np.ones(g.num_nodes, bool)).astype(np.float32)
+    return GraphView(g, K, "global", None, None, loss,
+                     {"targets": int(loss.sum())})
+
+
+def mini_batch_views(g: Graph, K: int, batch_nodes: int = 0,
+                     neighbor_cap: int = 0, seed: int = 0,
+                     steps: Optional[int] = None) -> Iterator[GraphView]:
+    """Random labeled targets + K-hop BFS active sets. ``neighbor_cap``
+    enables random neighbor sampling (off by default — non-sampling is the
+    paper's point). Paper defaults: 1% of labeled nodes per step."""
+    rng = np.random.default_rng(seed)
+    labeled = np.where(g.train_mask if g.train_mask is not None
+                       else np.ones(g.num_nodes, bool))[0]
+    bsz = batch_nodes or max(1, len(labeled) // 100)
+    i = 0
+    while steps is None or i < steps:
+        targets = rng.choice(labeled, size=min(bsz, len(labeled)),
+                             replace=False)
+        na, ea, lm, visited = khop_subgraph_view(g, targets, K,
+                                                 neighbor_cap, rng)
+        yield GraphView(g, K, "mini", na, ea, lm,
+                        {"targets": len(targets),
+                         "touched": int(visited.sum())})
+        i += 1
+
+
+def cluster_batch_views(g: Graph, K: int, clusters: np.ndarray,
+                        clusters_per_batch: int = 0, halo_hops: int = 0,
+                        seed: int = 0, steps: Optional[int] = None
+                        ) -> Iterator[GraphView]:
+    """Cluster-batched training (paper §2.3).
+
+    Picks random clusters; active nodes = cluster members (+ optional 1- or
+    2-hop boundary halo — the paper's extension over Cluster-GCN, App. B);
+    active edges = edges inside the active set; loss on labeled members.
+    """
+    rng = np.random.default_rng(seed)
+    num_clusters = int(clusters.max()) + 1
+    cpb = clusters_per_batch or max(1, num_clusters // 100)
+    train = (g.train_mask if g.train_mask is not None
+             else np.ones(g.num_nodes, bool))
+    i = 0
+    while steps is None or i < steps:
+        chosen = rng.choice(num_clusters, size=min(cpb, num_clusters),
+                            replace=False)
+        member = np.isin(clusters, chosen)
+        active = member.copy()
+        for _ in range(halo_hops):
+            # grow along incoming edges (neighbors feeding the members)
+            grow = np.zeros(g.num_nodes, bool)
+            inside = active[g.dst]
+            grow[g.src[inside]] = True
+            active |= grow
+        node_active = np.broadcast_to(
+            active.astype(np.float32), (K, g.num_nodes)).copy()
+        eact = (active[g.src] & active[g.dst]).astype(np.float32)
+        edge_active = np.broadcast_to(eact, (K, g.num_edges)).copy()
+        loss = (member & train).astype(np.float32)
+        if loss.sum() == 0:
+            loss = member.astype(np.float32)
+        yield GraphView(g, K, "cluster", node_active, edge_active, loss,
+                        {"clusters": [int(c) for c in chosen],
+                         "members": int(member.sum()),
+                         "active": int(active.sum())})
+        i += 1
+
+
+# ---------------------------------------------------------------------------
+# sharding a view onto a partition plan (for the distributed engine)
+# ---------------------------------------------------------------------------
+
+
+def shard_view(plan, view: GraphView) -> dict:
+    """Map a GraphView's global masks onto per-partition local arrays.
+
+    Returns numpy arrays stacked over partitions, ready for device_put:
+      node_active (P, K, n_m_pad), edge_active (P, K, e_pad),
+      loss_mask (P, n_m_pad).
+    """
+    P = plan.P
+    K = view.K
+    n_m_pad = plan.masters.shape[1]
+    e_pad = plan.src_local.shape[1]
+    node_active = np.ones((P, K, n_m_pad), np.float32)
+    edge_active = np.ones((P, K, e_pad), np.float32)
+    loss = np.zeros((P, n_m_pad), np.float32)
+    for p in range(P):
+        mids = plan.masters[p]
+        loss[p] = view.loss_mask[mids] * plan.master_mask[p]
+        if view.node_active is not None:
+            node_active[p] = (view.node_active[:, mids]
+                              * plan.master_mask[p][None, :])
+        else:
+            node_active[p] *= plan.master_mask[p][None, :]
+        eids = plan.edge_orig[p]
+        if view.edge_active is not None:
+            edge_active[p] = (view.edge_active[:, eids]
+                              * plan.edge_mask[p][None, :])
+        else:
+            edge_active[p] *= plan.edge_mask[p][None, :]
+    return {"node_active": node_active, "edge_active": edge_active,
+            "loss_mask": loss}

@@ -1,0 +1,138 @@
+"""NN-TGAR: the paper's graph-learning compute pattern (§3).
+
+One GNN encoding layer = NN-Transform -> NN-Gather -> Sum -> NN-Apply, with
+NN-Reduce aggregating parameter gradients across workers. Stages are neural
+network functions (UDFs in the paper); here they are pure JAX callables
+carried by a :class:`TGARLayer`. The backward pass is the reverse message
+flow (paper App. A.2) — produced by ``jax.grad`` through these stages, and
+*also* materialized explicitly in :mod:`repro.core.autodiff` to demonstrate
+the equivalence the paper proves.
+
+Combine modes supported by Sum (paper §3.1: "non-parameterized method like
+averaging, concatenation or a parameterized one"):
+  - "sum"     — plain Σ of edge messages per destination
+  - "mean"    — Σ / active-degree
+  - "softmax" — attention-style normalized Σ (GAT / GAT-E)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# segment primitives (the Sum stage). The Pallas kernel in
+# repro/kernels/segment_sum.py implements the same contract for TPU; the
+# jnp versions here are the portable reference used on CPU and in dry-runs.
+# ---------------------------------------------------------------------------
+
+
+def segment_sum(data, segment_ids, num_segments):
+    return jax.ops.segment_sum(data, segment_ids, num_segments)
+
+
+def segment_mean(data, segment_ids, num_segments, weights=None):
+    ones = jnp.ones(data.shape[:1], data.dtype) if weights is None else weights
+    total = jax.ops.segment_sum(data, segment_ids, num_segments)
+    count = jax.ops.segment_sum(ones, segment_ids, num_segments)
+    return total / jnp.maximum(count, 1e-9)[..., None]
+
+
+def segment_max(data, segment_ids, num_segments):
+    return jax.ops.segment_max(data, segment_ids, num_segments)
+
+
+def segment_softmax(logits, values, segment_ids, num_segments, edge_mask):
+    """Softmax over incoming edges per destination, applied to values.
+
+    logits: (E, H)  values: (E, H, D)  -> (num_segments, H, D)
+    """
+    masked = jnp.where(edge_mask[:, None] > 0, logits, NEG)
+    seg_max = jax.ops.segment_max(masked, segment_ids, num_segments)
+    seg_max = jnp.maximum(seg_max, NEG)          # empty segments
+    ex = jnp.exp(masked - seg_max[segment_ids]) * edge_mask[:, None]
+    den = jax.ops.segment_sum(ex, segment_ids, num_segments)
+    num = jax.ops.segment_sum(ex[..., None] * values, segment_ids,
+                              num_segments)
+    return num / jnp.maximum(den, 1e-9)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# TGAR layer protocol
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TGARLayer:
+    """One encoding layer in the NN-TGAR pattern.
+
+    init(key) -> params
+    transform(params, h) -> n                      # NN-T, per node
+    gather(params, n_src, n_dst, edge_attr, edge_w) -> msg   # NN-G, per edge
+        msg is {"value": (E,H,D)} and, for combine == "softmax",
+        additionally {"logit": (E,H)}.
+    apply(params, h, M) -> h_next                  # NN-A, per node
+    combine: "sum" | "mean" | "softmax"            # Sum stage semantics
+    out_dim / heads: bookkeeping for model composition.
+    """
+    name: str
+    init: Callable[[Any], Any]
+    transform: Callable[..., Any]
+    gather: Callable[..., Any]
+    apply: Callable[..., Any]
+    combine: str = "sum"
+    out_dim: int = 0
+    heads: int = 1
+
+    def message_dim(self):
+        return self.out_dim // self.heads
+
+
+def tree_take(tree, idx):
+    """Index the leading axis of every leaf (edge-endpoint lookup)."""
+    return jax.tree_util.tree_map(lambda a: a[idx], tree)
+
+
+def combine_messages(layer: TGARLayer, msg, dst, num_segments, edge_mask):
+    """The Sum stage on a single block (non-distributed path)."""
+    value = msg["value"] * edge_mask[:, None, None]
+    if layer.combine == "softmax":
+        return segment_softmax(msg["logit"], msg["value"], dst, num_segments,
+                               edge_mask)
+    total = segment_sum(value, dst, num_segments)
+    if layer.combine == "mean":
+        deg = segment_sum(edge_mask, dst, num_segments)
+        return total / jnp.maximum(deg, 1e-9)[:, None, None]
+    return total
+
+
+def layer_forward_block(layer: TGARLayer, params, h, block, layer_idx: int,
+                        num_nodes: int):
+    """Forward one TGAR layer on a GraphBlock (whole/sub-graph in one shard).
+
+    Applies the per-layer active sets (paper §4.2) so that a mini-batch
+    computes exactly the k-hop neighborhood, nothing more.
+    """
+    edge_mask = block.edge_mask
+    node_act = None
+    if block.edge_active is not None:
+        edge_mask = edge_mask * block.edge_active[layer_idx]
+    if block.node_active is not None:
+        node_act = block.node_active[layer_idx]
+
+    n = layer.transform(params, h)                        # NN-T
+    n_src = tree_take(n, block.src)
+    n_dst = tree_take(n, block.dst)
+    ea = block.edge_attr
+    msg = layer.gather(params, n_src, n_dst, ea, block.edge_weight,
+                       edge_mask)                         # NN-G
+    M = combine_messages(layer, msg, block.dst, num_nodes, edge_mask)  # Sum
+    h_next = layer.apply(params, h, M)                    # NN-A
+    if node_act is not None:
+        h_next = h_next * node_act[:, None]
+    return h_next * block.node_mask[:, None]

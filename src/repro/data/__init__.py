@@ -1,0 +1,4 @@
+from repro.data.tokens import SyntheticLMDataset, token_batches
+from repro.data.graphs import graph_feature_batch
+
+__all__ = ["SyntheticLMDataset", "token_batches", "graph_feature_batch"]

@@ -1,0 +1,9 @@
+from repro.graph.csr import Graph, GraphBlock, build_block
+from repro.graph.datasets import (
+    sbm_graph, powerlaw_graph, citation_graph, make_dataset,
+)
+
+__all__ = [
+    "Graph", "GraphBlock", "build_block",
+    "sbm_graph", "powerlaw_graph", "citation_graph", "make_dataset",
+]

@@ -1,0 +1,184 @@
+"""Graph storage: host-side global graph (CSR + CSC) and device GraphBlock.
+
+The paper (§4.1) organizes outgoing edges in CSR and incoming edges in CSC
+and stores node/edge values separately; we mirror that. ``Graph`` is the
+host/numpy global graph (the distributed store); ``GraphBlock`` is the
+fixed-shape jnp view a JIT-compiled step consumes (whole graph, a k-hop
+subgraph, or one partition's shard).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class Graph:
+    """Global directed graph. For undirected inputs both directions exist."""
+    src: np.ndarray                  # (M,) int32
+    dst: np.ndarray                  # (M,) int32
+    num_nodes: int
+    node_features: np.ndarray        # (N, F) float32
+    labels: np.ndarray               # (N,)  int32
+    edge_features: Optional[np.ndarray] = None   # (M, Fe) float32
+    edge_weights: Optional[np.ndarray] = None    # (M,)  float32
+    train_mask: Optional[np.ndarray] = None      # (N,) bool
+    val_mask: Optional[np.ndarray] = None
+    test_mask: Optional[np.ndarray] = None
+    name: str = "graph"
+    # CSR/CSC built lazily
+    _csr: Optional[tuple] = field(default=None, repr=False)
+    _csc: Optional[tuple] = field(default=None, repr=False)
+
+    @property
+    def num_edges(self) -> int:
+        return int(len(self.src))
+
+    # --- CSR (outgoing) / CSC (incoming) ------------------------------------
+
+    def csr(self):
+        """(indptr, order) such that edges order[indptr[u]:indptr[u+1]]
+        have src == u. ``order`` indexes into the edge arrays."""
+        if self._csr is None:
+            order = np.argsort(self.src, kind="stable").astype(np.int32)
+            counts = np.bincount(self.src, minlength=self.num_nodes)
+            indptr = np.zeros(self.num_nodes + 1, np.int64)
+            np.cumsum(counts, out=indptr[1:])
+            self._csr = (indptr, order)
+        return self._csr
+
+    def csc(self):
+        if self._csc is None:
+            order = np.argsort(self.dst, kind="stable").astype(np.int32)
+            counts = np.bincount(self.dst, minlength=self.num_nodes)
+            indptr = np.zeros(self.num_nodes + 1, np.int64)
+            np.cumsum(counts, out=indptr[1:])
+            self._csc = (indptr, order)
+        return self._csc
+
+    def out_degree(self) -> np.ndarray:
+        return np.bincount(self.src, minlength=self.num_nodes)
+
+    def in_degree(self) -> np.ndarray:
+        return np.bincount(self.dst, minlength=self.num_nodes)
+
+    def out_neighbors(self, u: int) -> np.ndarray:
+        indptr, order = self.csr()
+        return self.dst[order[indptr[u]:indptr[u + 1]]]
+
+    def gcn_norm(self) -> np.ndarray:
+        """Per-edge symmetric GCN normalization 1/sqrt(d_i d_j) with
+        self-loop-augmented degrees (Kipf & Welling)."""
+        deg = self.in_degree().astype(np.float64) + 1.0
+        return (1.0 / np.sqrt(deg[self.src] * deg[self.dst])).astype(
+            np.float32)
+
+    def add_self_loops(self) -> "Graph":
+        loops = np.arange(self.num_nodes, dtype=np.int32)
+        src = np.concatenate([self.src, loops])
+        dst = np.concatenate([self.dst, loops])
+        ef = None
+        if self.edge_features is not None:
+            ef = np.concatenate(
+                [self.edge_features,
+                 np.zeros((self.num_nodes, self.edge_features.shape[1]),
+                          self.edge_features.dtype)])
+        ew = None
+        if self.edge_weights is not None:
+            ew = np.concatenate(
+                [self.edge_weights, np.ones(self.num_nodes, np.float32)])
+        return Graph(src.astype(np.int32), dst.astype(np.int32),
+                     self.num_nodes, self.node_features, self.labels,
+                     ef, ew, self.train_mask, self.val_mask, self.test_mask,
+                     self.name + "+loops")
+
+
+@dataclass
+class GraphBlock:
+    """Fixed-shape device view. All arrays are padded; masks mark validity.
+
+    ``src``/``dst`` index into the node axis of ``x``. For a distributed
+    shard the node axis is [masters ; mirrors] (see core/partition.py).
+    Registered as a jax pytree (see bottom of file) so blocks pass through
+    ``jit`` boundaries directly.
+    """
+    src: np.ndarray                 # (E_pad,) int32
+    dst: np.ndarray                 # (E_pad,) int32
+    edge_mask: np.ndarray           # (E_pad,) f32 1=valid
+    node_mask: np.ndarray           # (N_pad,) f32 1=valid
+    x: np.ndarray                   # (N_pad, F)
+    y: np.ndarray                   # (N_pad,) int32
+    loss_mask: np.ndarray           # (N_pad,) f32 — nodes contributing loss
+    edge_weight: np.ndarray         # (E_pad,) f32 (e.g. GCN norm; 1s else)
+    edge_attr: Optional[np.ndarray] = None     # (E_pad, Fe)
+    # per-layer active sets (paper §4.2 "active status of nodes and edges");
+    # shape (K, N_pad) / (K, E_pad); None = all valid entries active
+    node_active: Optional[np.ndarray] = None
+    edge_active: Optional[np.ndarray] = None
+
+    @property
+    def num_nodes_padded(self) -> int:
+        return int(self.x.shape[0])
+
+    @property
+    def num_edges_padded(self) -> int:
+        return int(self.src.shape[0])
+
+
+def build_block(g: Graph, pad_nodes: int = 0, pad_edges: int = 0,
+                loss_mask: Optional[np.ndarray] = None,
+                gcn_norm: bool = True) -> GraphBlock:
+    """Whole-graph block (global-batch view)."""
+    n, m = g.num_nodes, g.num_edges
+    n_pad = max(pad_nodes, n)
+    e_pad = max(pad_edges, m)
+    src = np.zeros(e_pad, np.int32)
+    dst = np.zeros(e_pad, np.int32)
+    emask = np.zeros(e_pad, np.float32)
+    src[:m], dst[:m], emask[:m] = g.src, g.dst, 1.0
+    nmask = np.zeros(n_pad, np.float32)
+    nmask[:n] = 1.0
+    x = np.zeros((n_pad, g.node_features.shape[1]), np.float32)
+    x[:n] = g.node_features
+    y = np.zeros(n_pad, np.int32)
+    y[:n] = g.labels
+    lm = np.zeros(n_pad, np.float32)
+    if loss_mask is None:
+        loss_mask = (g.train_mask if g.train_mask is not None
+                     else np.ones(n, bool))
+    lm[:n] = loss_mask.astype(np.float32)
+    ew = np.zeros(e_pad, np.float32)
+    ew[:m] = g.gcn_norm() if gcn_norm else (
+        g.edge_weights if g.edge_weights is not None else 1.0)
+    ea = None
+    if g.edge_features is not None:
+        ea = np.zeros((e_pad, g.edge_features.shape[1]), np.float32)
+        ea[:m] = g.edge_features
+    return GraphBlock(src, dst, emask, nmask, x, y, lm, ew, ea)
+
+
+# ---------------------------------------------------------------------------
+# pytree registration: GraphBlock flows through jit/grad as a container
+# ---------------------------------------------------------------------------
+
+_BLOCK_FIELDS = ("src", "dst", "edge_mask", "node_mask", "x", "y",
+                 "loss_mask", "edge_weight", "edge_attr", "node_active",
+                 "edge_active")
+
+
+def _block_flatten(b: GraphBlock):
+    return tuple(getattr(b, f) for f in _BLOCK_FIELDS), None
+
+
+def _block_unflatten(aux, children):
+    return GraphBlock(*children)
+
+
+try:
+    import jax as _jax
+    _jax.tree_util.register_pytree_node(GraphBlock, _block_flatten,
+                                        _block_unflatten)
+except ImportError:  # numpy-only contexts
+    pass

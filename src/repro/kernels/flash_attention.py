@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: blockwise (flash) attention, causal + sliding window.
+
+Online-softmax accumulation over key blocks with running (max, denom, acc)
+in VMEM scratch; key blocks wholly outside the causal/sliding-window band
+are skipped. Block shapes are MXU-aligned (multiples of 128 in production;
+tests sweep smaller shapes in interpret mode).
+
+This is the serving-path hot spot for prefill_32k; the sliding-window mode
+is what lets dense assigned archs run long_500k (DESIGN.md §skips).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q: int, block_k: int, sm_scale: float,
+                  causal: bool, sliding_window: int, seq_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # ---- band check: does this (q, k) block intersect the mask band? -------
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if sliding_window:
+        # newest key needed for oldest query: q_start - window + 1
+        run_w = k_start + block_k - 1 >= q_start - sliding_window + 1
+    else:
+        run_w = True
+
+    @pl.when(jnp.logical_and(jnp.asarray(run), jnp.asarray(run_w)))
+    def _body():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)        # (BQ, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)        # (BK, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)        # (BK, Dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale
+        q_pos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        ok = k_pos < seq_len
+        if causal:
+            ok = jnp.logical_and(ok, k_pos <= q_pos)
+        if sliding_window:
+            ok = jnp.logical_and(ok, k_pos > q_pos - sliding_window)
+        s = jnp.where(ok, s, NEG)
+
+        m_prev = m_ref[...]                               # (BQ, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(ok, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, sliding_window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q,k,v: (B, T, H, D) (same H — apply GQA repeat outside).
+
+    Returns (B, T, H, Dv). T must divide by the block sizes.
+    """
+    B, T, H, D = q.shape
+    Dv = v.shape[-1]
+    assert T % block_q == 0 and T % block_k == 0
+    sm_scale = 1.0 / np.sqrt(D)
+    grid = (B, H, T // block_q, T // block_k)
+    spec_q = pl.BlockSpec((1, block_q, 1, D), lambda b, h, q_, k_: (b, q_, h, 0))
+    spec_k = pl.BlockSpec((1, block_k, 1, D), lambda b, h, q_, k_: (b, k_, h, 0))
+    spec_v = pl.BlockSpec((1, block_k, 1, Dv), lambda b, h, q_, k_: (b, k_, h, 0))
+    spec_o = pl.BlockSpec((1, block_q, 1, Dv), lambda b, h, q_, k_: (b, q_, h, 0))
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, block_q=block_q, block_k=block_k,
+                          sm_scale=sm_scale, causal=causal,
+                          sliding_window=sliding_window, seq_len=T),
+        grid=grid,
+        in_specs=[spec_q, spec_k, spec_v],
+        out_specs=spec_o,
+        out_shape=jax.ShapeDtypeStruct((B, T, H, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

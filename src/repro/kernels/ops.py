@@ -1,0 +1,162 @@
+"""jit'd public wrappers around the Pallas kernels (+ host-side planning).
+
+Each op takes ``interpret=`` so the TPU kernels validate on CPU; the pure
+jnp oracles live in ref.py. On this container everything runs in interpret
+mode; on a real TPU pod the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.segment_sum import segment_sum_csc
+from repro.kernels.wkv6 import wkv6 as _wkv6_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+
+
+# ---------------------------------------------------------------------------
+# segment sum: host plan + device op
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CSCPlan:
+    """Per-graph padded edge layout for the blocked aggregation kernel.
+
+    Built once per graph (the paper's reused CSC indexing); all views and
+    batches reuse it — only the per-edge messages change between steps.
+    """
+    gather_idx: np.ndarray    # (nb, L_pad) int32 into edge axis (E = pad row)
+    local_ids: np.ndarray     # (nb, L_pad) int32 in [0, BN]; BN = padding
+    num_blocks: int
+    block_n: int
+    block_e: int
+    num_segments: int
+    num_edges: int
+
+
+def build_csc_plan(segment_ids: np.ndarray, num_segments: int,
+                   block_n: int = 128, block_e: int = 256) -> CSCPlan:
+    ids = np.asarray(segment_ids)
+    E = len(ids)
+    order = np.argsort(ids, kind="stable").astype(np.int64)
+    sorted_ids = ids[order]
+    nb = (num_segments + block_n - 1) // block_n
+    starts = np.searchsorted(sorted_ids, np.arange(nb) * block_n)
+    ends = np.searchsorted(sorted_ids, np.minimum((np.arange(nb) + 1)
+                                                  * block_n, num_segments))
+    lens = ends - starts
+    l_max = int(lens.max()) if nb else 0
+    l_pad = max(block_e, ((l_max + block_e - 1) // block_e) * block_e)
+    gather = np.full((nb, l_pad), E, np.int32)          # E = zero pad row
+    local = np.full((nb, l_pad), block_n, np.int32)     # BN = dead row
+    for b in range(nb):
+        sl = order[starts[b]:ends[b]]
+        gather[b, :lens[b]] = sl
+        local[b, :lens[b]] = ids[sl] - b * block_n
+    return CSCPlan(gather, local, nb, block_n, block_e, num_segments, E)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_segments", "block_n", "block_e", "interpret"))
+def _segment_sum_planned(data, gather_idx, local_ids, num_segments: int,
+                         block_n: int, block_e: int, interpret: bool):
+    D = data.shape[1]
+    padded = jnp.concatenate([data, jnp.zeros((1, D), data.dtype)], axis=0)
+    gathered = padded[gather_idx]                         # (nb, L_pad, D)
+    out = segment_sum_csc(gathered, local_ids, gather_idx.shape[0],
+                          block_n, block_e, interpret=interpret)
+    return out[:num_segments]
+
+
+def segment_sum_op(data: jax.Array, plan: CSCPlan,
+                   interpret: bool = True) -> jax.Array:
+    """data (E, D) float -> (num_segments, D), via the Pallas kernel."""
+    assert data.shape[0] == plan.num_edges
+    return _segment_sum_planned(
+        data, jnp.asarray(plan.gather_idx), jnp.asarray(plan.local_ids),
+        plan.num_segments, plan.block_n, plan.block_e, interpret)
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_op(r, k, v, w, u, chunk: int = 64, interpret: bool = True):
+    """Chunked WKV6; pads T up to a chunk multiple and slices back."""
+    B, T, H, K = r.shape
+    pad = (-T) % chunk
+    if pad:
+        zk = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zk(r), zk(k), zk(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    out = _wkv6_kernel(r, k, v, w, u, chunk=chunk, interpret=interpret)
+    return out[:, :T]
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "sliding_window", "block_q", "block_k", "interpret"))
+def flash_attention_op(q, k, v, causal: bool = True, sliding_window: int = 0,
+                       block_q: int = 128, block_k: int = 128,
+                       interpret: bool = True):
+    """GQA-aware wrapper: repeats kv heads to q heads, pads T to blocks."""
+    B, T, Hq, D = q.shape
+    Hkv = k.shape[2]
+    if Hkv != Hq:
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    bq = min(block_q, T)
+    bk = min(block_k, T)
+    pad = (-T) % max(bq, bk)
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v = zp(q), zp(k), zp(v)
+    out = _flash_kernel(q, k, v, causal=causal,
+                        sliding_window=sliding_window,
+                        block_q=bq, block_k=bk, interpret=interpret)
+    return out[:, :T]
+
+
+# ---------------------------------------------------------------------------
+# edge softmax (GAT aggregation)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_segments", "block_n", "block_e", "interpret"))
+def _edge_softmax_planned(logits, values, gather_idx, local_ids,
+                          num_segments: int, block_n: int, block_e: int,
+                          interpret: bool):
+    from repro.kernels.edge_softmax import edge_softmax_csc
+    D = values.shape[1]
+    pl_ = jnp.concatenate([logits, jnp.full((1,), -1e30, logits.dtype)])
+    pv = jnp.concatenate([values, jnp.zeros((1, D), values.dtype)], axis=0)
+    gl = pl_[gather_idx]
+    gv = pv[gather_idx]
+    out = edge_softmax_csc(gl, gv, local_ids, gather_idx.shape[0],
+                           block_n, block_e, interpret=interpret)
+    return out[:num_segments]
+
+
+def edge_softmax_op(logits: jax.Array, values: jax.Array, plan: CSCPlan,
+                    interpret: bool = True) -> jax.Array:
+    """Fused GAT aggregation: logits (E,), values (E, D) ->
+    (num_segments, D) of softmax-weighted neighbor sums."""
+    assert logits.shape[0] == plan.num_edges
+    return _edge_softmax_planned(
+        logits, values, jnp.asarray(plan.gather_idx),
+        jnp.asarray(plan.local_ids), plan.num_segments, plan.block_n,
+        plan.block_e, interpret)

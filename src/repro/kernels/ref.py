@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# segment_sum
+# ---------------------------------------------------------------------------
+
+
+def segment_sum_ref(data, segment_ids, num_segments):
+    """data (E, D), ids (E,) -> (num_segments, D)."""
+    return jax.ops.segment_sum(data, segment_ids, num_segments)
+
+
+# ---------------------------------------------------------------------------
+# wkv6 (RWKV-6 "Finch" recurrence)
+# ---------------------------------------------------------------------------
+
+
+def wkv6_ref(r, k, v, w, u):
+    """Sequential oracle of the WKV6 recurrence.
+
+    r,k,w: (B, T, H, K)   v: (B, T, H, V)   u: (H, K) bonus
+    state S: (B, H, K, V);  per step:
+        o_t = (r_t ⊙ 1)·(S + diag(u)·k_t v_t^T)
+        S  <- diag(w_t)·S + k_t v_t^T
+    Returns (o (B,T,H,V), S_final).
+    All math in f32.
+    """
+    r = r.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    u = u.astype(jnp.float32)
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    S0 = jnp.zeros((B, H, K, V), jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, out
+
+    xs = (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 1, 0), jnp.moveaxis(w, 1, 0))
+    S, out = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(out, 0, 1), S
+
+
+# ---------------------------------------------------------------------------
+# flash attention (causal, optional sliding window)
+# ---------------------------------------------------------------------------
+
+
+def mha_ref(q, k, v, causal=True, sliding_window=0):
+    """q,k,v: (B, T, H, D) -> (B, T, H, D); f32 softmax oracle."""
+    B, T, H, D = q.shape
+    scale = 1.0 / np.sqrt(D)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qi = jnp.arange(T)[:, None]
+    ki = jnp.arange(T)[None, :]
+    ok = jnp.ones((T, T), bool)
+    if causal:
+        ok &= ki <= qi
+    if sliding_window:
+        ok &= ki > qi - sliding_window
+    s = jnp.where(ok[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# edge softmax (GAT aggregation)
+# ---------------------------------------------------------------------------
+
+
+def edge_softmax_ref(logits, values, segment_ids, num_segments):
+    """logits (E,), values (E, D) -> (num_segments, D)."""
+    seg_max = jax.ops.segment_max(logits, segment_ids, num_segments)
+    seg_max = jnp.maximum(seg_max, -1e30)
+    ex = jnp.exp(logits - seg_max[segment_ids])
+    den = jax.ops.segment_sum(ex, segment_ids, num_segments)
+    num = jax.ops.segment_sum(ex[:, None] * values, segment_ids,
+                              num_segments)
+    return num / jnp.maximum(den, 1e-20)[:, None]

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: chunked WKV6 recurrence (RWKV-6 "Finch").
+
+The recurrence  S_t = diag(w_t)·S_{t-1} + k_t v_tᵀ,  o_t = r_tᵀ(S_{t-1} +
+diag(u)·k_t v_tᵀ)  is sequential per step on GPU implementations; the TPU
+adaptation processes the sequence in chunks of ``C`` tokens so that the
+dominant work is three MXU matmuls per chunk:
+
+  inter-chunk:  o += (r ⊙ e^{Λ_{t-1}}) @ S                (C,K)@(K,V)
+  intra-chunk:  o += tril(scores) @ v                     (C,C)@(C,V)
+  state update: S = e^{Λ_C} ⊙ S + (k ⊙ e^{Λ_C-Λ})ᵀ @ v    (K,C)@(C,V)
+
+with Λ = cumsum(log w) inside the chunk. All decay exponents are ≤ 0, so
+the log-domain form is overflow-free by construction. The carried state
+lives in a VMEM scratch across the sequential chunk grid axis.
+
+The intra-chunk scores need per-channel decay between every (t, u) pair —
+a (C, C, K) tensor. ``C`` is chosen so this fits VMEM (C=64, K=64 → 1 MB
+f32); that is the VMEM-driven block-shape decision recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_ref, *,
+                 chunk: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)       # (C, K)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)       # (C, V)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)       # (C, K), in (0, 1)
+    u = u_ref[0].astype(jnp.float32)                # (K,)
+    S = state_ref[...]                               # (K, V) f32
+
+    lw = jnp.log(jnp.maximum(w, 1e-12))
+    la = jnp.cumsum(lw, axis=0)                      # Λ_t (inclusive)
+    la_ex = la - lw                                  # Λ_{t-1} (exclusive)
+
+    # ---- inter-chunk: state contribution -----------------------------------
+    r_dec = r * jnp.exp(la_ex)                       # exponents ≤ 0
+    o = jax.lax.dot_general(r_dec, S, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # ---- intra-chunk: pairwise decayed attention ----------------------------
+    # decay[t, u, d] = exp(Λ_{t-1,d} - Λ_{u,d})  for u < t  (≤ 0 exponent)
+    ldiff = la_ex[:, None, :] - la[None, :, :]       # (C, C, K)
+    t_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    u_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    strict = u_i < t_i
+    decay = jnp.where(strict[..., None], jnp.exp(ldiff), 0.0)
+    scores = jnp.sum(r[:, None, :] * k[None, :, :] * decay, axis=-1)
+    # diagonal "bonus" term: current token weighted by u instead of w
+    diag = jnp.sum(r * k * u[None, :], axis=-1)      # (C,)
+    scores = scores + jnp.where(t_i == u_i, diag[:, None], 0.0)
+    o = o + jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # ---- state update --------------------------------------------------------
+    la_last = la[-1]                                 # (K,)
+    k_dec = k * jnp.exp(la_last[None, :] - la)       # ≤ 0 exponent
+    outer = jax.lax.dot_general(k_dec, v, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    state_ref[...] = jnp.exp(la_last)[:, None] * S + outer
+
+    o_ref[0, :, 0, :] = o.astype(o_ref.dtype)
+
+
+def wkv6(r, k, v, w, u, *, chunk: int = 64, interpret: bool = False):
+    """Chunked WKV6. r,k,w: (B,T,H,K); v: (B,T,H,V); u: (H,K).
+
+    Returns o: (B,T,H,V). T must be divisible by ``chunk``.
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    spec_k = pl.BlockSpec((1, chunk, 1, K), lambda b, h, c: (b, c, h, 0))
+    spec_v = pl.BlockSpec((1, chunk, 1, V), lambda b, h, c: (b, c, h, 0))
+    return pl.pallas_call(
+        functools.partial(_wkv6_kernel, chunk=chunk),
+        grid=(B, H, nc),
+        in_specs=[spec_k, spec_k, spec_v, spec_k,
+                  pl.BlockSpec((1, K), lambda b, h, c: (h, 0))],
+        out_specs=spec_v,
+        out_shape=jax.ShapeDtypeStruct((B, T, H, V), r.dtype),
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

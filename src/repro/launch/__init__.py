@@ -1,0 +1,2 @@
+# Launcher: production mesh, auto-FSDP sharding rules, multi-pod dry-run,
+# trainers for both the GNN engine (the paper) and the transformer zoo.

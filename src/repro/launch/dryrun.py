@@ -1,0 +1,362 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+combination on the production mesh with placeholder devices, and extract
+memory / cost / collective artifacts for the roofline analysis.
+
+Run:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b \
+        --shape train_4k --mesh single --out results/
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Lowering uses ShapeDtypeStructs with NamedShardings only — no arrays are
+materialized. The train step lowers loss+grad+optimizer update (AdamW, f32
+m/v) so memory_analysis reflects real training state.
+"""
+import argparse
+import json
+import sys
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import (ASSIGNED_ARCHS, INPUT_SHAPES, get_arch_config,
+                          ArchConfig, InputShape)
+from repro.arch import build_model, use_hints
+from repro.launch.mesh import make_production_mesh, data_axes
+from repro.launch import sharding as sh
+from repro.launch.roofline import derive_terms
+from repro.optim import adamw
+
+# long_500k policy (DESIGN.md §skips): sub-quadratic archs only; dense archs
+# run it only with the sliding-window variant (--swa / arch suffix ":swa").
+LONG_OK = {"rwkv6-1.6b", "jamba-1.5-large-398b", "mixtral-8x7b"}
+LONG_SKIP_REASON = {
+    "qwen3-4b": "full attention; run with --swa for the SWA variant",
+    "qwen3-32b": "full attention (O(S^2), 500k infeasible by design)",
+    "phi3-medium-14b": "full attention (O(S^2), 500k infeasible by design)",
+    "minicpm3-4b": "MLA is full attention over the latent cache",
+    "qwen2-vl-2b": "full attention",
+    "whisper-base": "enc-dec; decoder positions << 500k by construction",
+    "dbrx-132b": "full attention",
+}
+
+
+def applicable(arch: str, shape_name: str, swa: bool) -> Optional[str]:
+    """None if runnable, else skip reason."""
+    if shape_name == "long_500k" and arch not in LONG_OK:
+        if swa and arch in ("qwen3-4b", "phi3-medium-14b", "qwen3-32b"):
+            return None
+        return LONG_SKIP_REASON.get(arch, "full attention")
+    return None
+
+
+def arch_config(arch: str, swa: bool = False,
+                mamba_chunk: int = 0) -> ArchConfig:
+    cfg = get_arch_config(arch)
+    if swa and cfg.sliding_window == 0 and cfg.num_heads:
+        cfg = cfg.replace(sliding_window=4096)
+    if mamba_chunk and cfg.mamba is not None:
+        import dataclasses
+        cfg = cfg.replace(mamba=dataclasses.replace(cfg.mamba,
+                                                    chunk=mamba_chunk))
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, mesh, model):
+    """ShapeDtypeStructs (sharding-annotated) for every input of the step
+    that `shape` exercises. No device memory is allocated."""
+    dp = data_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        tok_S = 1
+    else:
+        tok_S = S
+    batch = {}
+    if cfg.embed_inputs:
+        batch["embeds"] = jax.ShapeDtypeStruct((B, tok_S, cfg.d_model),
+                                               jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, tok_S), jnp.int32)
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((B, tok_S), jnp.int32)
+    if cfg.mrope:
+        batch["mrope_positions"] = jax.ShapeDtypeStruct((3, B, tok_S),
+                                                        jnp.int32)
+    if cfg.encoder_layers:
+        if shape.kind == "decode":
+            # serving carries the prefill-computed encoder memory
+            batch["enc_memory"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["enc_frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    specs = sh.batch_specs(batch, mesh, dp)
+    return sh.named(batch, {k: specs[k] for k in batch}, mesh)
+
+
+def hint_rules(mesh, seq_shard: bool = True):
+    dp = data_axes(mesh)
+    dpn = dp if len(dp) > 1 else dp[0]
+    return {"batch": dpn, "seq": "model" if seq_shard else None,
+            "vocab": "model", "heads_flat": "model"}
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def lower_train(cfg, shape, mesh, moe_impl="dense", unroll=False,
+                opts=None):
+    opts = opts or {}
+    dp = data_axes(mesh)
+    model = build_model(cfg, moe_impl=moe_impl, mesh=mesh, remat=True)
+    model.unroll_layers = unroll
+    model.remat_policy = opts.get("remat", "full")
+    model.remat_granularity = opts.get("remat_gran", "group")
+    opt = adamw(1e-4)
+    p_shapes = model.param_shapes()
+    p_specs = sh.param_specs(p_shapes, mesh, dp)
+    p_named = sh.named(p_shapes, p_specs, mesh)
+    o_shapes = jax.eval_shape(opt.init, p_shapes)
+    o_specs = {"step": jax.sharding.PartitionSpec(),
+               "m": p_specs, "v": p_specs}
+    o_named = sh.named(o_shapes, o_specs, mesh)
+    batch = input_specs(cfg, shape, mesh, model)
+
+    n_micro = opts.get("microbatch", 1)
+    if n_micro > 1:
+        from repro.launch.microbatch import microbatched_value_and_grad
+        vag = microbatched_value_and_grad(model.loss, n_micro,
+                                          unroll=unroll)
+    else:
+        vag = jax.value_and_grad(model.loss)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = vag(params, batch)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return loss, params, opt_state
+
+    with use_hints(mesh, hint_rules(mesh,
+                                    not opts.get("no_seq_shard", False))):
+        lowered = jax.jit(train_step,
+                          donate_argnums=(0, 1)).lower(p_named, o_named,
+                                                       batch)
+    return lowered
+
+
+def lower_prefill(cfg, shape, mesh, moe_impl="dense", unroll=False,
+                  opts=None):
+    opts = opts or {}
+    dp = data_axes(mesh)
+    model = build_model(cfg, moe_impl=moe_impl, mesh=mesh, remat=False)
+    model.unroll_layers = unroll
+    p_shapes = model.param_shapes()
+    p_named = sh.named(p_shapes, sh.param_specs(p_shapes, mesh, dp), mesh)
+    batch = input_specs(cfg, shape, mesh, model)
+    S = shape.seq_len
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cache_len=S)
+
+    with use_hints(mesh, hint_rules(mesh)):
+        lowered = jax.jit(prefill_step).lower(p_named, batch)
+    return lowered
+
+
+def lower_decode(cfg, shape, mesh, moe_impl="dense",
+                 rolling: bool = False, unroll=False, opts=None):
+    opts = opts or {}
+    dp = data_axes(mesh)
+    model = build_model(cfg, moe_impl=moe_impl, mesh=mesh, remat=False,
+                        rolling_window_decode=rolling)
+    model.unroll_layers = unroll
+    p_shapes = model.param_shapes()
+    if opts.get("serve_weights") == "model-only":
+        # serving layout: weights sharded over 'model' only (replicated
+        # over 'data') -> no per-step FSDP all-gather at decode
+        p_specs = sh.param_specs(p_shapes, mesh, ())
+        p_named = sh.named(p_shapes, p_specs, mesh)
+    else:
+        p_named = sh.named(p_shapes, sh.param_specs(p_shapes, mesh, dp),
+                           mesh)
+    batch = input_specs(cfg, shape, mesh, model)
+    B, S = shape.global_batch, shape.seq_len
+    c_shapes = jax.eval_shape(lambda: model.init_cache(B, S))
+    c_named = sh.named(c_shapes, sh.cache_specs(c_shapes, mesh, dp), mesh)
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(params, caches, batch, index):
+        return model.decode_step(params, batch, caches, index)
+
+    with use_hints(mesh, hint_rules(mesh)):
+        lowered = jax.jit(serve_step,
+                          donate_argnums=(1,)).lower(p_named, c_named,
+                                                     batch, idx)
+    return lowered
+
+
+def lower_step(cfg, shape, mesh, moe_impl="dense", rolling=False,
+               unroll=False, opts=None):
+    if shape.kind == "train":
+        return lower_train(cfg, shape, mesh, moe_impl, unroll, opts)
+    if shape.kind == "prefill":
+        return lower_prefill(cfg, shape, mesh, moe_impl, unroll, opts)
+    return lower_decode(cfg, shape, mesh, moe_impl, rolling, unroll, opts)
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def _group_size(cfg: ArchConfig) -> int:
+    return (cfg.attn_every
+            if (cfg.mamba is not None and cfg.attn_every) else 1)
+
+
+def run_one(arch: str, shape_name: str, mesh_name: str, moe_impl: str,
+            swa: bool, out_dir: Optional[str], verbose: bool = True,
+            calibrate: bool = True, opts: Optional[dict] = None,
+            tag_suffix: str = "") -> dict:
+    from repro.launch.roofline import extract_costs, combine_calibrated
+
+    opts = opts or {}
+    shape = INPUT_SHAPES[shape_name]
+    skip = applicable(arch, shape_name, swa)
+    tag = (f"{arch}{':swa' if swa else ''}|{shape_name}|{mesh_name}|"
+           f"{moe_impl}{tag_suffix}")
+    if skip:
+        rec = {"tag": tag, "status": "skip", "reason": skip}
+        if verbose:
+            print(f"[dryrun] SKIP {tag}: {skip}")
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            fname = tag.replace("|", "__").replace(":", "_") + ".json"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                json.dump(rec, f, indent=1)
+        return rec
+    cfg = arch_config(arch, swa, mamba_chunk=opts.get("mamba_chunk", 0))
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = int(np.prod(list(mesh.shape.values())))
+    rolling = swa or (arch == "mixtral-8x7b" and shape_name == "long_500k") \
+        or opts.get("rolling", False)
+    try:
+        # the deliverable: full-depth lower + compile must succeed
+        lowered = lower_step(cfg, shape, mesh, moe_impl, rolling, opts=opts)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        if calibrate:
+            # layer-scan cost calibration (XLA costs While bodies once):
+            # 1-group and 2-group variants give exact per-group deltas
+            g = _group_size(cfg)
+            n_groups = cfg.num_layers // g
+            c1 = extract_costs(
+                lower_step(cfg.replace(num_layers=g), shape, mesh,
+                           moe_impl, rolling, unroll=True,
+                           opts=opts).compile())
+            c2 = extract_costs(
+                lower_step(cfg.replace(num_layers=2 * g), shape, mesh,
+                           moe_impl, rolling, unroll=True,
+                           opts=opts).compile())
+            cost = combine_calibrated(c1, c2, n_groups)
+        else:
+            cost = extract_costs(compiled)
+        terms = derive_terms(arch + (":swa" if swa else ""), shape,
+                             mesh_name, chips, cost, mem, hlo, cfg)
+        rec = {"tag": tag, "status": "ok", "calibrated": calibrate,
+               **terms.as_dict()}
+        if verbose:
+            print(f"[dryrun] OK   {tag}  "
+                  f"flops/dev={terms.hlo_flops_per_device:.3e} "
+                  f"mem/dev={terms.memory_per_device_bytes/2**30:.2f}GiB "
+                  f"coll/dev={terms.collective_bytes_per_device/2**20:.1f}MiB "
+                  f"dom={terms.dominant} "
+                  f"useful={terms.useful_flops_ratio:.2f}")
+            print(f"[dryrun]      memory_analysis: {mem}")
+    except Exception as e:  # noqa: BLE001 — report every failure mode
+        rec = {"tag": tag, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+        if verbose:
+            print(f"[dryrun] FAIL {tag}: {type(e).__name__}: {e}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = tag.replace("|", "__").replace(":", "_") + ".json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--moe-impl", default="dense", choices=["dense", "ep"])
+    ap.add_argument("--swa", action="store_true",
+                    help="sliding-window variant for dense archs")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--rolling", action="store_true",
+                    help="O(window) rolling decode cache (SWA archs)")
+    ap.add_argument("--serve-weights", default="fsdp",
+                    choices=["fsdp", "model-only"])
+    ap.add_argument("--remat", default="full",
+                    choices=["full", "dots", "none"])
+    ap.add_argument("--remat-gran", default="group",
+                    choices=["group", "block"])
+    ap.add_argument("--mamba-chunk", type=int, default=0)
+    ap.add_argument("--no-seq-shard", action="store_true",
+                    help="batch-only activation sharding (SSM archs)")
+    ap.add_argument("--microbatch", type=int, default=1,
+                    help="gradient-accumulation micro-batches (train)")
+    ap.add_argument("--no-calibrate", action="store_true",
+                    help="skip the unrolled cost-calibration compiles "
+                         "(memory analysis only; costs from the scan "
+                         "compile are trip-count-undercounted)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for perf-iteration artifacts")
+    args = ap.parse_args(argv)
+    opts = {"rolling": args.rolling, "serve_weights": args.serve_weights,
+            "remat": args.remat, "remat_gran": args.remat_gran,
+            "mamba_chunk": args.mamba_chunk,
+            "no_seq_shard": args.no_seq_shard,
+            "microbatch": args.microbatch}
+
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                results.append(run_one(arch, shape, mesh_name,
+                                       args.moe_impl, args.swa, args.out,
+                                       opts=opts,
+                                       calibrate=not args.no_calibrate,
+                                       tag_suffix=args.tag))
+    bad = [r for r in results if r["status"] == "error"]
+    print(f"[dryrun] {len(results)} combos: "
+          f"{sum(r['status'] == 'ok' for r in results)} ok, "
+          f"{sum(r['status'] == 'skip' for r in results)} skip, "
+          f"{len(bad)} error")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

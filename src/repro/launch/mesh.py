@@ -1,0 +1,31 @@
+"""Production mesh construction (defined as functions, never at import
+time, so importing this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips for multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Whatever devices exist locally (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """The data-parallel axes of a mesh ('pod' joins 'data' when present)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# TPU v5e hardware constants used by the roofline analysis (§Roofline).
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

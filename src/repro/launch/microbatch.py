@@ -1,0 +1,76 @@
+"""Gradient-accumulation microbatching.
+
+The §Roofline fit analysis shows ≥100B-param archs cannot hold a full
+1M-token global batch's activations on one pod even with remat; splitting
+the global batch into micro-batches bounds activation memory by the
+micro-batch size while keeping the optimizer math identical (mean of
+per-micro gradients == full-batch gradient for a mean loss).
+
+``unroll=True`` replaces the accumulation ``lax.scan`` with a python loop —
+used by the dry-run cost calibration (While bodies are costed once).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# batch-dim index per input key (mrope positions carry a leading stream dim)
+_BATCH_AXIS = {"mrope_positions": 1}
+
+
+def split_batch(batch: dict, n_micro: int) -> dict:
+    """Reshape every input to (n_micro, B/n_micro, ...) on its batch dim."""
+    out = {}
+    for k, v in batch.items():
+        ax = _BATCH_AXIS.get(k, 0)
+        b = v.shape[ax]
+        assert b % n_micro == 0, (k, v.shape, n_micro)
+        new_shape = (v.shape[:ax] + (n_micro, b // n_micro)
+                     + v.shape[ax + 1:])
+        v = v.reshape(new_shape)
+        if ax:
+            v = jnp.moveaxis(v, ax, 0)
+        out[k] = v
+    return out
+
+
+def microbatched_value_and_grad(loss_fn, n_micro: int, unroll: bool = False):
+    """Returns fn(params, batch) -> (mean loss, mean grads)."""
+    if n_micro <= 1:
+        return jax.value_and_grad(loss_fn)
+
+    def fn(params, batch):
+        mb = split_batch(batch, n_micro)
+        zero_g = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def one(i_or_slice):
+            b = i_or_slice
+            loss, grads = jax.value_and_grad(loss_fn)(params, b)
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+            return loss, grads
+
+        if unroll:
+            acc_l = jnp.zeros((), jnp.float32)
+            acc_g = zero_g
+            for i in range(n_micro):
+                b = jax.tree_util.tree_map(lambda v: v[i], mb)
+                loss, grads = one(b)
+                acc_l = acc_l + loss
+                acc_g = jax.tree_util.tree_map(jnp.add, acc_g, grads)
+        else:
+            def body(carry, b):
+                loss, grads = one(b)
+                al, ag = carry
+                return (al + loss,
+                        jax.tree_util.tree_map(jnp.add, ag, grads)), None
+
+            (acc_l, acc_g), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zero_g), mb)
+        scale = 1.0 / n_micro
+        grads = jax.tree_util.tree_map(
+            lambda g, p: (g * scale).astype(p.dtype), acc_g, params)
+        return acc_l * scale, grads
+
+    return fn

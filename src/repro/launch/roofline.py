@@ -1,0 +1,174 @@
+"""Roofline-term derivation from compiled dry-run artifacts (§Roofline).
+
+The container is CPU-only; TPU v5e is the *target*. We therefore derive the
+three roofline terms from the compiled executable instead of wall-clock:
+
+  compute    = HLO_FLOPs(per device) / 197 TF/s
+  memory     = HLO_bytes(per device) / 819 GB/s
+  collective = collective_bytes(per device) / 50 GB/s (1 ICI link, worst
+               case; v5e has more links — the term is an upper bound)
+
+``collective_bytes`` is parsed from the post-SPMD HLO: we sum, per
+collective op (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute), the larger of its result size and first-operand size —
+a device must at least read or write that many bytes over the interconnect
+path. cost_analysis()/memory_analysis() provide FLOPs and HBM traffic.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+from typing import Optional
+
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(m) -> int:
+    dt, dims = m.group(1), m.group(2)
+    b = _DTYPE_BYTES.get(dt)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind byte totals from (post-SPMD, per-device) HLO."""
+    totals = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        kind = None
+        for k in _COLLECTIVES:
+            # match the op name, e.g. "= bf16[..] all-gather(", not %tags
+            if f" {k}(" in s or f" {k}-start(" in s:
+                kind = k
+                break
+        if kind is None:
+            continue
+        shapes = [_shape_bytes(m) for m in _SHAPE_RE.finditer(s)]
+        if not shapes:
+            continue
+        # result shape(s) come first (possibly a tuple), operands follow;
+        # take the max single shape as the bytes the op moves per device.
+        totals[kind] += max(shapes)
+        counts[kind] += 1
+    totals["total"] = sum(totals[k] for k in _COLLECTIVES)
+    totals["counts"] = counts
+    return totals
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    collective_bytes_per_device: float
+    t_compute_s: float
+    t_memory_s: float
+    t_collective_s: float
+    dominant: str
+    model_flops_per_device: float
+    useful_flops_ratio: float
+    memory_per_device_bytes: float
+    collective_breakdown: Optional[dict] = None
+
+    def as_dict(self):
+        return asdict(self)
+
+
+def model_flops(cfg, shape, chips: int) -> float:
+    """Analytic MODEL_FLOPS for the step, per device.
+
+    train: 6·N_active·tokens; prefill: 2·N_active·tokens;
+    decode: 2·N_active·batch (one token per sequence).
+    """
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        total = 6.0 * n * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        total = 2.0 * n * shape.global_batch * shape.seq_len
+    else:
+        total = 2.0 * n * shape.global_batch
+    return total / chips
+
+
+def extract_costs(compiled) -> dict:
+    """(flops, bytes, collective bytes) for one compiled executable."""
+    cost = dict(compiled.cost_analysis() or {})
+    coll = parse_collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(coll["total"]),
+        "coll_breakdown": {k: v for k, v in coll.items() if k != "counts"},
+    }
+
+
+def combine_calibrated(c1: dict, c2: dict, n_groups: int) -> dict:
+    """Layer-scan calibration: XLA costs While bodies once, so we lower a
+    1-group and a 2-group variant; the difference is one group's true cost
+    and ``total = c1 + delta·(n_groups-1)`` (see DESIGN.md)."""
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        delta = c2[k] - c1[k]
+        out[k] = max(c1[k] + delta * (n_groups - 1), 0.0)
+    out["coll_breakdown"] = {
+        k: max(c1["coll_breakdown"].get(k, 0)
+               + (c2["coll_breakdown"].get(k, 0)
+                  - c1["coll_breakdown"].get(k, 0)) * (n_groups - 1), 0)
+        for k in set(c1["coll_breakdown"]) | set(c2["coll_breakdown"])}
+    return out
+
+
+def derive_terms(arch: str, shape, mesh_name: str, chips: int,
+                 cost: dict, mem: object, hlo_text: str, cfg
+                 ) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes", cost.get("bytes accessed",
+                                                      0.0)))
+    if "coll" in cost:
+        coll = {"total": cost["coll"], **{
+            k: v for k, v in cost.get("coll_breakdown", {}).items()}}
+    else:
+        coll = parse_collective_bytes(hlo_text)
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = bytes_accessed / HBM_BW
+    t_x = coll["total"] / ICI_BW
+    dominant = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+                   key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape, chips)
+    mem_bytes = 0.0
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes"):
+        mem_bytes += float(getattr(mem, attr, 0.0) or 0.0)
+    # donated inputs alias outputs — don't count those bytes twice
+    mem_bytes -= float(getattr(mem, "alias_size_in_bytes", 0.0) or 0.0)
+    return RooflineTerms(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops_per_device=flops, hlo_bytes_per_device=bytes_accessed,
+        collective_bytes_per_device=float(coll["total"]),
+        t_compute_s=t_c, t_memory_s=t_m, t_collective_s=t_x,
+        dominant=dominant, model_flops_per_device=mf,
+        useful_flops_ratio=(mf / flops) if flops else 0.0,
+        memory_per_device_bytes=mem_bytes,
+        collective_breakdown={k: v for k, v in coll.items()
+                              if k != "counts"},
+    )

@@ -1,0 +1,195 @@
+"""Auto-FSDP sharding rules: map every parameter / optimizer / cache leaf
+to a PartitionSpec on the production mesh.
+
+GraphTheta's hybrid-parallel principle (one batch computed by the whole
+worker group) maps here to: weights and optimizer state fully sharded over
+('data', 'model'), activations batch-sharded over data (+pod) and
+sequence-sharded over model between blocks. Parameters are *not* sharded
+over 'pod' (grads all-reduce over DCI once per step instead of paying
+per-layer cross-pod all-gathers — the cheaper direction for 2 pods).
+
+The generic rule is greedy: give 'model' to the largest divisible tensor
+dim, then 'data' to the largest remaining divisible dim. Leaves under a
+layer-stack ("blocks"/"encoder") skip their leading stack dim. Exceptions
+(expert dim → 'model' for EP alignment; cache layouts) are keyed by leaf
+name. Non-divisible dims are left unsharded — that is what makes the same
+rules work for every assigned architecture.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        names = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        out.append(("/".join(str(n) for n in names), leaf))
+    return out, treedef
+
+
+def _greedy_spec(shape, mesh, skip_leading: bool, expert_dim: Optional[int],
+                 dp=("data",)):
+    """dp=() disables the data-axis FSDP assignment (serving layout)."""
+    model_n = mesh.shape["model"]
+    data_n = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    spec = [None] * len(shape)
+    start = 1 if skip_leading and len(shape) > 1 else 0
+    dims = list(range(start, len(shape)))
+    used_model = used_data = False
+    # expert dim gets 'model' first (EP alignment)
+    if expert_dim is not None and expert_dim < len(shape) \
+            and shape[expert_dim] % model_n == 0:
+        spec[expert_dim] = "model"
+        used_model = True
+        dims.remove(expert_dim)
+    for want in ("model", "data"):
+        if want == "model" and used_model:
+            continue
+        if want == "data" and used_data:
+            continue
+        n = model_n if want == "model" else data_n
+        if n <= 1:
+            continue
+        cands = sorted((d for d in dims if spec[d] is None and
+                        shape[d] % n == 0 and shape[d] >= n),
+                       key=lambda d: -shape[d])
+        if cands:
+            d = cands[0]
+            spec[d] = "model" if want == "model" else (
+                dp if len(dp) > 1 else dp[0])
+            dims.remove(d)
+    return P(*spec)
+
+
+_CACHE_RULES = {
+    # name -> callable(shape, mesh, dp) -> PartitionSpec; all cache leaves
+    # carry a leading layer-stack dim.
+    "k": lambda s, m, dp: _kv_spec(s, m, dp),
+    "v": lambda s, m, dp: _kv_spec(s, m, dp),
+    "c_kv": lambda s, m, dp: _seq_spec(s, m, dp),
+    "k_rope": lambda s, m, dp: _seq_spec(s, m, dp),
+    "state": lambda s, m, dp: _head_spec(s, m, dp),
+    "conv": lambda s, m, dp: _lastdim_spec(s, m, dp),
+    "last": lambda s, m, dp: _lastdim_spec(s, m, dp),
+    "pos": lambda s, m, dp: P(*([None] * len(s))),
+}
+
+
+def _div(n, axes_size):
+    return axes_size > 1 and n % axes_size == 0 and n >= axes_size
+
+
+def _dp_size(mesh, dp):
+    return int(np.prod([mesh.shape[a] for a in dp]))
+
+
+def _dp_name(dp):
+    return dp if len(dp) > 1 else dp[0]
+
+
+def _kv_spec(s, mesh, dp):
+    # (G, B, S, H, hd): batch -> dp, seq -> model
+    spec = [None] * len(s)
+    if _div(s[1], _dp_size(mesh, dp)):
+        spec[1] = _dp_name(dp)
+    if _div(s[2], mesh.shape["model"]):
+        spec[2] = "model"
+    return P(*spec)
+
+
+def _seq_spec(s, mesh, dp):
+    # (G, B, S, r)
+    spec = [None] * len(s)
+    if _div(s[1], _dp_size(mesh, dp)):
+        spec[1] = _dp_name(dp)
+    if _div(s[2], mesh.shape["model"]):
+        spec[2] = "model"
+    return P(*spec)
+
+
+def _head_spec(s, mesh, dp):
+    # (G, B, H, P, N): batch -> dp, heads -> model
+    spec = [None] * len(s)
+    if _div(s[1], _dp_size(mesh, dp)):
+        spec[1] = _dp_name(dp)
+    if len(s) > 2 and _div(s[2], mesh.shape["model"]):
+        spec[2] = "model"
+    return P(*spec)
+
+
+def _lastdim_spec(s, mesh, dp):
+    spec = [None] * len(s)
+    if _div(s[1], _dp_size(mesh, dp)):
+        spec[1] = _dp_name(dp)
+    if _div(s[-1], mesh.shape["model"]):
+        spec[-1] = "model"
+    return P(*spec)
+
+
+_EXPERT_LEAVES = ("wi_gate", "wi_up", "wo")
+
+
+def param_specs(params_shapes, mesh: Mesh, dp=("data",)):
+    """PartitionSpec pytree for parameters (or optimizer state — same
+    structure rules apply to any mirrored tree)."""
+    flat, treedef = _flatten_with_names(params_shapes)
+    specs = []
+    for name, leaf in flat:
+        shape = leaf.shape
+        if len(shape) == 0:
+            specs.append(P())
+            continue
+        parts = name.split("/")
+        in_stack = parts[0] in ("blocks", "encoder") or (
+            len(parts) > 1 and parts[1] in ("blocks", "encoder"))
+        leafname = parts[-1]
+        expert_dim = None
+        if any(p in ("ffn",) for p in parts) and leafname in _EXPERT_LEAVES \
+                and len(shape) >= 3:
+            expert_dim = 1 if in_stack else 0
+        if len(shape) == 1 or (in_stack and len(shape) == 2):
+            specs.append(P(*([None] * len(shape))))   # biases/scales
+            continue
+        specs.append(_greedy_spec(shape, mesh, in_stack, expert_dim, dp))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def cache_specs(cache_shapes, mesh: Mesh, dp=("data",)):
+    flat, treedef = _flatten_with_names(cache_shapes)
+    specs = []
+    for name, leaf in flat:
+        leafname = name.split("/")[-1]
+        rule = _CACHE_RULES.get(leafname)
+        if rule is None:
+            specs.append(P(*([None] * len(leaf.shape))))
+        else:
+            specs.append(rule(leaf.shape, mesh, dp))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(batch_shapes, mesh: Mesh, dp=("data",)):
+    """tokens/labels (B,S) -> (dp, None); embeds (B,S,D) -> (dp, None, None);
+    mrope (3,B,S) -> (None, dp, None); enc_frames (B,S,D) -> (dp, ...)."""
+    out = {}
+    dpn = _dp_name(dp)
+    for k, v in batch_shapes.items():
+        spec = [None] * len(v.shape)
+        bdim = 1 if k == "mrope_positions" else 0
+        if _div(v.shape[bdim], _dp_size(mesh, dp)):
+            spec[bdim] = dpn
+        out[k] = P(*spec)
+    return out
+
+
+def named(tree_shapes, specs, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+    return jax.tree_util.tree_map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        tree_shapes, specs)

@@ -1,0 +1,5 @@
+from repro.models.gnn_zoo import (
+    gcn_layer, sage_layer, gat_layer, gat_e_layer, make_gnn,
+)
+
+__all__ = ["gcn_layer", "sage_layer", "gat_layer", "gat_e_layer", "make_gnn"]

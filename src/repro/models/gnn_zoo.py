@@ -1,0 +1,196 @@
+"""GNN models expressed as MPGNN/TGAR layers.
+
+Each factory returns a :class:`TGARLayer` whose Proj/Prop/Agg functions map
+onto the paper's Algorithm 1:
+
+- ``gcn_layer``   — GCN (Kipf & Welling): Proj = W·h, Prop = L(i,j)·n_j,
+  Agg = Σ (the spectral-equivalence construction of paper App. A.1).
+- ``sage_layer``  — GraphSAGE mean aggregator: Prop = n_j, Agg = mean,
+  Apy = ReLU([h ; M]·W).
+- ``gat_layer``   — GAT: Prop computes attention logits from (n_i, n_j),
+  Agg = softmax-weighted Σ (paper App. C uses this model).
+- ``gat_e_layer`` — GAT-E, the paper's in-house model (§5.2.2): edge
+  attributes join the attention logit and the message value — a simplified
+  GIPA. This is the model used for the Alipay-like benchmark.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tgar import TGARLayer
+from repro.nn.layers import _fan_in_init, dense_init, dense_apply
+
+
+def _leaky_relu(x, slope=0.2):
+    return jnp.where(x > 0, x, slope * x)
+
+
+# ---------------------------------------------------------------------------
+# GCN
+# ---------------------------------------------------------------------------
+
+
+def gcn_layer(in_dim: int, out_dim: int, activation: bool = True,
+              name: str = "gcn") -> TGARLayer:
+    def init(key):
+        return dense_init(key, in_dim, out_dim, use_bias=True)
+
+    def transform(p, h):                       # Proj_k: n = h W
+        return {"n": h @ p["w"]}
+
+    def gather(p, n_src, n_dst, edge_attr, edge_w, edge_mask):
+        # Prop_k: m_{j->i} = L(i,j) * n_j   (edge_w carries the GCN norm)
+        return {"value": (n_src["n"] * edge_w[:, None])[:, None, :]}
+
+    def apply(p, h, M):                        # Apy_k
+        out = M[:, 0, :] + p["b"]
+        return jax.nn.relu(out) if activation else out
+
+    return TGARLayer(name, init, transform, gather, apply,
+                     combine="sum", out_dim=out_dim, heads=1)
+
+
+# ---------------------------------------------------------------------------
+# GraphSAGE (mean)
+# ---------------------------------------------------------------------------
+
+
+def sage_layer(in_dim: int, out_dim: int, activation: bool = True,
+               name: str = "sage") -> TGARLayer:
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"w_self": dense_init(k1, in_dim, out_dim),
+                "w_neigh": dense_init(k2, in_dim, out_dim)}
+
+    def transform(p, h):
+        return {"n": h}                        # Proj = identity; W in Apy
+
+    def gather(p, n_src, n_dst, edge_attr, edge_w, edge_mask):
+        return {"value": n_src["n"][:, None, :]}
+
+    def apply(p, h, M):
+        out = dense_apply(p["w_self"], h) + dense_apply(p["w_neigh"],
+                                                        M[:, 0, :])
+        return jax.nn.relu(out) if activation else out
+
+    return TGARLayer(name, init, transform, gather, apply,
+                     combine="mean", out_dim=out_dim, heads=1)
+
+
+# ---------------------------------------------------------------------------
+# GAT
+# ---------------------------------------------------------------------------
+
+
+def gat_layer(in_dim: int, out_dim: int, heads: int = 4,
+              activation: bool = True, name: str = "gat") -> TGARLayer:
+    hd = out_dim // heads
+    assert hd * heads == out_dim, "out_dim must divide heads"
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        return {
+            "w": _fan_in_init(ks[0], (in_dim, heads * hd), jnp.float32),
+            "a_src": _fan_in_init(ks[1], (heads, hd), jnp.float32),
+            "a_dst": _fan_in_init(ks[2], (heads, hd), jnp.float32),
+            "b": jnp.zeros((out_dim,), jnp.float32),
+        }
+
+    def transform(p, h):
+        n = (h @ p["w"]).reshape(h.shape[0], heads, hd)
+        # per-node halves of the attention logit (computed once per node,
+        # not per edge — the paper's NN-T stage owns node-local math)
+        return {"n": n,
+                "as": jnp.einsum("nhd,hd->nh", n, p["a_src"]),
+                "ad": jnp.einsum("nhd,hd->nh", n, p["a_dst"])}
+
+    def gather(p, n_src, n_dst, edge_attr, edge_w, edge_mask):
+        logit = _leaky_relu(n_src["as"] + n_dst["ad"])
+        return {"logit": logit, "value": n_src["n"]}
+
+    def apply(p, h, M):
+        out = M.reshape(M.shape[0], heads * hd) + p["b"]
+        return jax.nn.elu(out) if activation else out
+
+    return TGARLayer(name, init, transform, gather, apply,
+                     combine="softmax", out_dim=out_dim, heads=heads)
+
+
+# ---------------------------------------------------------------------------
+# GAT-E (edge-attributed attention — the paper's in-house Alipay model)
+# ---------------------------------------------------------------------------
+
+
+def gat_e_layer(in_dim: int, out_dim: int, edge_dim: int, heads: int = 4,
+                activation: bool = True, name: str = "gat_e") -> TGARLayer:
+    hd = out_dim // heads
+    assert hd * heads == out_dim
+
+    def init(key):
+        ks = jax.random.split(key, 6)
+        return {
+            "w": _fan_in_init(ks[0], (in_dim, heads * hd), jnp.float32),
+            "a_src": _fan_in_init(ks[1], (heads, hd), jnp.float32),
+            "a_dst": _fan_in_init(ks[2], (heads, hd), jnp.float32),
+            "w_e_att": _fan_in_init(ks[3], (edge_dim, heads), jnp.float32),
+            "w_e_val": _fan_in_init(ks[4], (edge_dim, heads * hd),
+                                    jnp.float32),
+            "b": jnp.zeros((out_dim,), jnp.float32),
+        }
+
+    def transform(p, h):
+        n = (h @ p["w"]).reshape(h.shape[0], heads, hd)
+        return {"n": n,
+                "as": jnp.einsum("nhd,hd->nh", n, p["a_src"]),
+                "ad": jnp.einsum("nhd,hd->nh", n, p["a_dst"])}
+
+    def gather(p, n_src, n_dst, edge_attr, edge_w, edge_mask):
+        # edge attributes join both the attention logit and the value
+        e_att = edge_attr @ p["w_e_att"]                       # (E, H)
+        e_val = (edge_attr @ p["w_e_val"]).reshape(
+            edge_attr.shape[0], heads, hd)
+        logit = _leaky_relu(n_src["as"] + n_dst["ad"] + e_att)
+        return {"logit": logit, "value": n_src["n"] + e_val}
+
+    def apply(p, h, M):
+        out = M.reshape(M.shape[0], heads * hd) + p["b"]
+        return jax.nn.elu(out) if activation else out
+
+    return TGARLayer(name, init, transform, gather, apply,
+                     combine="softmax", out_dim=out_dim, heads=heads)
+
+
+# ---------------------------------------------------------------------------
+# model factory
+# ---------------------------------------------------------------------------
+
+
+def make_gnn(cfg, feature_dim: Optional[int] = None):
+    """Build an MPGNNModel from a GNNConfig."""
+    from repro.core.mpgnn import MPGNNModel
+
+    f = feature_dim if feature_dim is not None else cfg.feature_dim
+    dims = [f] + [cfg.hidden_dim] * cfg.num_layers
+    layers = []
+    for k in range(cfg.num_layers):
+        last = k == cfg.num_layers - 1
+        act = not last
+        if cfg.model == "gcn":
+            layers.append(gcn_layer(dims[k], dims[k + 1], act,
+                                    name=f"gcn{k}"))
+        elif cfg.model == "sage":
+            layers.append(sage_layer(dims[k], dims[k + 1], act,
+                                     name=f"sage{k}"))
+        elif cfg.model == "gat":
+            layers.append(gat_layer(dims[k], dims[k + 1], cfg.num_heads,
+                                    act, name=f"gat{k}"))
+        elif cfg.model == "gat_e":
+            layers.append(gat_e_layer(dims[k], dims[k + 1],
+                                      cfg.edge_feature_dim, cfg.num_heads,
+                                      act, name=f"gat_e{k}"))
+        else:
+            raise ValueError(f"unknown GNN model {cfg.model!r}")
+    return MPGNNModel(tuple(layers), cfg.num_classes)

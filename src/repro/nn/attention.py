@@ -1,0 +1,335 @@
+"""Attention blocks: RoPE / M-RoPE, GQA (+sliding window, qk-norm), MLA.
+
+All functions are pure; KV caches are explicit pytrees threaded through
+``serve_step``. Softmax is computed in f32 regardless of activation dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.layers import _fan_in_init, rmsnorm_init, rmsnorm_apply
+
+NEG_INF = -1e30
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0):
+    """Inverse frequencies, shape (head_dim//2,) f32."""
+    exponents = np.arange(0, head_dim, 2, dtype=np.float32) / head_dim
+    return jnp.asarray(1.0 / (theta ** exponents), jnp.float32)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_frequencies(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv    # (..., S, hd/2)
+    ang = ang[..., None, :]                                 # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float = 10000.0,
+                sections=(0.25, 0.375, 0.375)):
+    """Multimodal RoPE (Qwen2-VL). positions3: (3, ..., S) = (t, h, w) ids.
+
+    The rotary half-dim is split into three contiguous sections, each rotated
+    by its own position stream. ``sections`` are fractions of hd//2.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    s0 = int(round(sections[0] * half))
+    s1 = int(round(sections[1] * half))
+    sizes = [s0, s1, half - s0 - s1]
+    inv = rope_frequencies(hd, theta)                       # (half,)
+    parts, off = [], 0
+    for i, sz in enumerate(sizes):
+        pos = positions3[i][..., None].astype(jnp.float32)  # (..., S, 1)
+        parts.append(pos * inv[off:off + sz])
+        off += sz
+    ang = jnp.concatenate(parts, axis=-1)[..., None, :]     # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+
+def make_attention_bias(q_pos, k_pos, causal: bool, sliding_window: int = 0,
+                        k_valid=None):
+    """Additive bias (..., Sq, Sk) in f32: 0 allowed / NEG_INF blocked."""
+    qp = q_pos[..., :, None].astype(jnp.int32)
+    kp = k_pos[..., None, :].astype(jnp.int32)
+    allowed = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        allowed = allowed & (kp <= qp)
+    if sliding_window:
+        allowed = allowed & (kp > qp - sliding_window)
+    if k_valid is not None:
+        allowed = allowed & k_valid[..., None, :]
+    return jnp.where(allowed, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def attention_init(key, d_model, num_heads, num_kv_heads, head_dim,
+                   dtype=jnp.float32, qk_norm=False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _fan_in_init(ks[0], (d_model, num_heads * head_dim), dtype),
+        "wk": _fan_in_init(ks[1], (d_model, num_kv_heads * head_dim), dtype),
+        "wv": _fan_in_init(ks[2], (d_model, num_kv_heads * head_dim), dtype),
+        "wo": _fan_in_init(ks[3], (num_heads * head_dim, d_model), dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = rmsnorm_init(head_dim, dtype)
+        p["k_norm"] = rmsnorm_init(head_dim, dtype)
+    return p
+
+
+def _sdpa(q, k, v, bias):
+    """q: (B,Sq,Hkv,G,hd)  k,v: (B,Sk,Hkv,hd)  bias: (B,1|Hkv,Sq,Sk)->f32."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = scores + bias[:, :, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out
+
+
+def attention_apply(p, x, *, num_heads, num_kv_heads, head_dim,
+                    positions=None, rope_theta=10000.0, qk_norm=False,
+                    norm_eps=1e-5, causal=True, sliding_window=0,
+                    cache=None, cache_index=None, kv_x=None, kv_positions=None,
+                    mrope_positions=None):
+    """Unified GQA attention.
+
+    - train/prefill: ``cache is None`` — self attention over x.
+    - decode: ``cache`` = {"k","v"} (B, S_max, Hkv, hd); new kv written at
+      ``cache_index`` (scalar int array); returns (out, new_cache).
+    - cross attention: ``kv_x`` given (encoder memory) — no cache, no rope.
+    """
+    B, Sq, _ = x.shape
+    G = num_heads // num_kv_heads
+    q = (x @ p["wq"]).reshape(B, Sq, num_kv_heads, G, head_dim)
+    src = kv_x if kv_x is not None else x
+    Sk_new = src.shape[1]
+    k = (src @ p["wk"]).reshape(B, Sk_new, num_kv_heads, head_dim)
+    v = (src @ p["wv"]).reshape(B, Sk_new, num_kv_heads, head_dim)
+
+    if qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q, norm_eps)
+        k = rmsnorm_apply(p["k_norm"], k, norm_eps)
+
+    is_cross = kv_x is not None
+    if not is_cross:
+        if mrope_positions is not None:
+            q = apply_mrope(q.reshape(B, Sq, num_heads, head_dim),
+                            mrope_positions, rope_theta
+                            ).reshape(B, Sq, num_kv_heads, G, head_dim)
+            k = apply_mrope(k, mrope_positions, rope_theta)
+        elif positions is not None:
+            q = apply_rope(q.reshape(B, Sq, num_heads, head_dim),
+                           positions, rope_theta
+                           ).reshape(B, Sq, num_kv_heads, G, head_dim)
+            kpos = kv_positions if kv_positions is not None else positions
+            k = apply_rope(k, kpos, rope_theta)
+
+    new_cache = None
+    if cache is not None and "pos" in cache:
+        # rolling sliding-window cache: W slots, slot = position mod W.
+        # Keeps long_500k decode memory O(window) instead of O(seq).
+        W = cache["k"].shape[1]
+        idx = cache_index
+        if Sq > 1:
+            # prefill into the rolling cache: attend within the prompt
+            # (causal + window), then store only the last W entries.
+            q_pos = (idx + jnp.arange(Sq, dtype=jnp.int32))[None, :]
+            bias = make_attention_bias(q_pos, q_pos, causal=True,
+                                       sliding_window=sliding_window)
+            bias = jnp.broadcast_to(bias, (B, 1) + bias.shape[-2:])
+            out = _sdpa(q, k, v, bias)
+            out = out.reshape(B, Sq, num_heads * head_dim).astype(x.dtype)
+            out = out @ p["wo"]
+            last = min(W, Sq)
+            tail_pos = idx + Sq - last + jnp.arange(last, dtype=jnp.int32)
+            slots = jax.lax.rem(tail_pos, W)
+            ck = cache["k"].at[:, slots].set(
+                k[:, -last:].astype(cache["k"].dtype))
+            cv = cache["v"].at[:, slots].set(
+                v[:, -last:].astype(cache["v"].dtype))
+            cpos = cache["pos"].at[slots].set(tail_pos)
+            return out, {"k": ck, "v": cv, "pos": cpos}
+        slot = jax.lax.rem(idx, W)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        cpos = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], idx[None].astype(jnp.int32) if idx.ndim == 0
+            else idx.astype(jnp.int32), slot, axis=0)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        k, v = ck, cv
+        q_pos = (idx + jnp.arange(Sq, dtype=jnp.int32))[None, :]
+        k_pos = cpos[None, :]
+        bias = make_attention_bias(q_pos, k_pos, causal=True,
+                                   sliding_window=sliding_window,
+                                   k_valid=(cpos >= 0)[None, :])
+        bias = jnp.broadcast_to(bias, (B, 1) + bias.shape[-2:])
+    elif cache is not None:
+        # write the new kv at cache_index, attend over the whole cache
+        idx = cache_index
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        S_max = ck.shape[1]
+        k_pos = jnp.arange(S_max, dtype=jnp.int32)[None, :]
+        q_pos = (idx + jnp.arange(Sq, dtype=jnp.int32))[None, :]
+        k_valid = (k_pos <= (idx + Sq - 1))
+        bias = make_attention_bias(q_pos, k_pos, causal=True,
+                                   sliding_window=sliding_window,
+                                   k_valid=k_valid)
+        bias = jnp.broadcast_to(bias, (B, 1) + bias.shape[-2:])
+    elif is_cross:
+        bias = jnp.zeros((B, 1, Sq, Sk_new), jnp.float32)
+    else:
+        q_pos = positions if positions is not None else (
+            jnp.arange(Sq, dtype=jnp.int32)[None, :])
+        if q_pos.ndim == 1:
+            q_pos = q_pos[None, :]
+        bias = make_attention_bias(q_pos, q_pos, causal=causal,
+                                   sliding_window=sliding_window)
+        if bias.ndim == 3:
+            bias = bias[:, None, :, :]
+        bias = jnp.broadcast_to(bias, (B, 1) + bias.shape[-2:])
+
+    out = _sdpa(q, k, v, bias)
+    out = out.reshape(B, Sq, num_heads * head_dim).astype(x.dtype)
+    out = out @ p["wo"]
+    if cache is not None:
+        return out, new_cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, d_model, num_heads, mla, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    qh = mla.qk_nope_head_dim + mla.qk_rope_head_dim
+    return {
+        "wq_a": _fan_in_init(ks[0], (d_model, mla.q_lora_rank), dtype),
+        "q_a_norm": rmsnorm_init(mla.q_lora_rank, dtype),
+        "wq_b": _fan_in_init(ks[1], (mla.q_lora_rank, num_heads * qh), dtype),
+        "wkv_a": _fan_in_init(
+            ks[2], (d_model, mla.kv_lora_rank + mla.qk_rope_head_dim), dtype),
+        "kv_a_norm": rmsnorm_init(mla.kv_lora_rank, dtype),
+        "wk_b": _fan_in_init(
+            ks[3], (mla.kv_lora_rank, num_heads * mla.qk_nope_head_dim), dtype),
+        "wv_b": _fan_in_init(
+            ks[4], (mla.kv_lora_rank, num_heads * mla.v_head_dim), dtype),
+        "wo": _fan_in_init(ks[5], (num_heads * mla.v_head_dim, d_model), dtype),
+    }
+
+
+def _mla_qkv(p, x, num_heads, mla, positions, rope_theta, norm_eps):
+    """Shared projection: returns q_nope, q_rope, c_kv, k_rope."""
+    B, S, _ = x.shape
+    qh = mla.qk_nope_head_dim + mla.qk_rope_head_dim
+    q = rmsnorm_apply(p["q_a_norm"], x @ p["wq_a"], norm_eps) @ p["wq_b"]
+    q = q.reshape(B, S, num_heads, qh)
+    q_nope = q[..., : mla.qk_nope_head_dim]
+    q_rope = q[..., mla.qk_nope_head_dim:]
+    kv = x @ p["wkv_a"]
+    c_kv = rmsnorm_apply(p["kv_a_norm"], kv[..., : mla.kv_lora_rank], norm_eps)
+    k_rope = kv[..., mla.kv_lora_rank:][:, :, None, :]      # shared head
+    if positions is not None:
+        q_rope = apply_rope(q_rope, positions, rope_theta)
+        k_rope = apply_rope(k_rope, positions, rope_theta)
+    return q_nope, q_rope, c_kv, k_rope[:, :, 0, :]
+
+
+def mla_apply(p, x, *, num_heads, mla, positions=None, rope_theta=10000.0,
+              norm_eps=1e-5, cache=None, cache_index=None):
+    """MLA attention.
+
+    prefill/train: decompress K/V per head, standard causal attention.
+    decode (cache given): *absorbed* formulation — cache holds only
+    ``c_kv`` (B,S,kv_rank) + ``k_rope`` (B,S,rope_dim); queries are projected
+    into latent space (q_nope @ wk_b per head), attention runs over the
+    compressed cache, and the value up-projection is applied after weighting.
+    """
+    B, Sq, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(
+        p, x, num_heads, mla, positions, rope_theta, norm_eps)
+    scale = 1.0 / np.sqrt(mla.qk_nope_head_dim + mla.qk_rope_head_dim)
+
+    if cache is None:
+        S = Sq
+        k_nope = (c_kv @ p["wk_b"]).reshape(B, S, num_heads,
+                                            mla.qk_nope_head_dim)
+        v = (c_kv @ p["wv_b"]).reshape(B, S, num_heads, mla.v_head_dim)
+        pos = positions if positions is not None else (
+            jnp.arange(S, dtype=jnp.int32)[None, :])
+        if pos.ndim == 1:
+            pos = pos[None, :]
+        bias = make_attention_bias(pos, pos, causal=True)
+        if bias.ndim == 3:
+            bias = bias[:, None]
+        scores = (jnp.einsum("bqhd,bkhd->bhqk", q_nope.astype(jnp.float32),
+                             k_nope.astype(jnp.float32))
+                  + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                               k_rope.astype(jnp.float32))) * scale
+        probs = jax.nn.softmax(scores + bias, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+        out = out.reshape(B, Sq, num_heads * mla.v_head_dim).astype(x.dtype)
+        return out @ p["wo"]
+
+    # ---- absorbed decode over compressed cache ----------------------------
+    idx = cache_index
+    cc = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), idx, axis=1)
+    cr = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), idx, axis=1)
+    new_cache = {"c_kv": cc, "k_rope": cr}
+    S_max = cc.shape[1]
+    wk_b = p["wk_b"].reshape(mla.kv_lora_rank, num_heads, mla.qk_nope_head_dim)
+    # absorb: q_lat (B,Sq,H,kv_rank)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scores = (jnp.einsum("bqhr,bkr->bhqk", q_lat,
+                         cc.astype(jnp.float32))
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                           cr.astype(jnp.float32))) * scale
+    k_pos = jnp.arange(S_max, dtype=jnp.int32)[None, :]
+    q_pos = (idx + jnp.arange(Sq, dtype=jnp.int32))[None, :]
+    k_valid = k_pos <= (idx + Sq - 1)
+    bias = make_attention_bias(q_pos, k_pos, causal=True, k_valid=k_valid)
+    probs = jax.nn.softmax(scores + bias[:, None], axis=-1)
+    o_lat = jnp.einsum("bhqk,bkr->bqhr", probs, cc.astype(jnp.float32))
+    wv_b = p["wv_b"].reshape(mla.kv_lora_rank, num_heads, mla.v_head_dim)
+    out = jnp.einsum("bqhr,rhd->bqhd", o_lat, wv_b.astype(jnp.float32))
+    out = out.reshape(B, Sq, num_heads * mla.v_head_dim).astype(x.dtype)
+    return out @ p["wo"], new_cache

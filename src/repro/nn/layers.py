@@ -1,0 +1,164 @@
+"""Hand-rolled NN building blocks (functional: init -> params dict, apply).
+
+No flax/optax in the environment; everything is an explicit pytree of
+``jnp`` arrays so that sharding rules can be attached per-leaf by the
+launcher (see ``repro.launch.sharding``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def _fan_in_init(key, shape, dtype, scale=1.0):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def glorot(key, shape, dtype):
+    fan_in, fan_out = shape[0], shape[-1]
+    limit = np.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -limit, limit).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim, out_dim, dtype=jnp.float32, use_bias=True,
+               scale=1.0):
+    kw, kb = jax.random.split(key)
+    p = {"w": _fan_in_init(kw, (in_dim, out_dim), dtype, scale)}
+    if use_bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense_apply(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm_apply(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(key, vocab, dim, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, dim), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embedding_apply(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def unembed_apply(p, x):
+    """Logits via the (possibly tied) embedding table."""
+    return x @ p["table"].T.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_init(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": _fan_in_init(k1, (d_model, d_ff), dtype),
+        "wi_up": _fan_in_init(k2, (d_model, d_ff), dtype),
+        "wo": _fan_in_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def swiglu_apply(p, x):
+    g = jax.nn.silu(x @ p["wi_gate"])
+    u = x @ p["wi_up"]
+    return (g * u) @ p["wo"]
+
+
+def gelu_mlp_init(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": dense_init(k1, d_model, d_ff, dtype),
+        "wo": dense_init(k2, d_ff, d_model, dtype),
+    }
+
+
+def gelu_mlp_apply(p, x):
+    return dense_apply(p["wo"], jax.nn.gelu(dense_apply(p["wi"], x)))
+
+
+# ---------------------------------------------------------------------------
+# losses / regularizers
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """Mean CE over (optionally masked) examples. labels: int ids."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def binary_cross_entropy(logits, labels, mask=None):
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    nll = jnp.maximum(logits, 0) - logits * labels + jnp.log1p(
+        jnp.exp(-jnp.abs(logits)))
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def dropout(key, x, rate, deterministic=False):
+    if deterministic or rate == 0.0:
+        return x
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(key, keep, x.shape)
+    return jnp.where(mask, x / keep, 0.0).astype(x.dtype)

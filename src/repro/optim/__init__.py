@@ -1,0 +1,11 @@
+from repro.optim.optimizers import (
+    Optimizer, sgd, adam, adamw, make_optimizer,
+    cosine_schedule, constant_schedule, warmup_cosine_schedule,
+    clip_by_global_norm,
+)
+
+__all__ = [
+    "Optimizer", "sgd", "adam", "adamw", "make_optimizer",
+    "cosine_schedule", "constant_schedule", "warmup_cosine_schedule",
+    "clip_by_global_norm",
+]

@@ -1,0 +1,164 @@
+"""Hand-rolled optimizers (the paper ships SGD, Adam, AdamW — §4).
+
+Functional interface:
+    opt = adam(lr=1e-3)
+    state = opt.init(params)
+    params, state = opt.update(grads, state, params)
+
+Optimizer state mirrors the param pytree (sharding follows params), which
+is what lets the launcher shard m/v the same way as weights (FSDP).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_global_norm
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1
+                    ) -> Schedule:
+    def f(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.asarray(lr * (final_frac + (1 - final_frac) * cos),
+                           jnp.float32)
+    return f
+
+
+def warmup_cosine_schedule(lr: float, warmup: int, total_steps: int,
+                           final_frac: float = 0.1) -> Schedule:
+    cos = cosine_schedule(lr, max(total_steps - warmup, 1), final_frac)
+    def f(step):
+        wu = lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        return jnp.where(step < warmup, wu, cos(step - warmup)).astype(
+            jnp.float32)
+    return f
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params) -> (params, state)
+    name: str = "opt"
+
+
+def _to_sched(lr) -> Schedule:
+    return lr if callable(lr) else constant_schedule(lr)
+
+
+def sgd(lr=1e-2, momentum: float = 0.0, weight_decay: float = 0.0,
+        grad_clip: float = 0.0) -> Optimizer:
+    sched = _to_sched(lr)
+
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mu"] = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return state
+
+    def update(grads, state, params):
+        if grad_clip:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        step = state["step"] + 1
+        lr_t = sched(state["step"])
+        if weight_decay:
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype),
+                grads, params)
+        if momentum:
+            mu = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state["mu"], grads)
+            new_params = jax.tree_util.tree_map(
+                lambda p, m: (p.astype(jnp.float32) - lr_t * m
+                              ).astype(p.dtype), params, mu)
+            return new_params, {"step": step, "mu": mu}
+        new_params = jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_params, {"step": step}
+
+    return Optimizer(init, update, "sgd")
+
+
+def _adam_like(lr, b1, b2, eps, weight_decay, decoupled, grad_clip, name):
+    sched = _to_sched(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+        }
+
+    def update(grads, state, params):
+        if grad_clip:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        step = state["step"] + 1
+        lr_t = sched(state["step"])
+        if weight_decay and not decoupled:  # classic L2 (paper's Adam)
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype),
+                grads, params)
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(
+                g.astype(jnp.float32)), state["v"], grads)
+        stepf = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** stepf
+        bc2 = 1 - b2 ** stepf
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay and decoupled:  # AdamW
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, m, v)
+        return new_params, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update, name)
+
+
+def adam(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+         grad_clip: float = 0.0) -> Optimizer:
+    return _adam_like(lr, b1, b2, eps, weight_decay, False, grad_clip, "adam")
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01,
+          grad_clip: float = 0.0) -> Optimizer:
+    return _adam_like(lr, b1, b2, eps, weight_decay, True, grad_clip, "adamw")
+
+
+def make_optimizer(name: str, lr, weight_decay: float = 0.0,
+                   grad_clip: float = 0.0) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr, momentum=0.9, weight_decay=weight_decay,
+                   grad_clip=grad_clip)
+    if name == "adam":
+        return adam(lr, weight_decay=weight_decay, grad_clip=grad_clip)
+    if name == "adamw":
+        return adamw(lr, weight_decay=weight_decay or 0.01,
+                     grad_clip=grad_clip)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,45 @@
+"""Pytree helpers used across the framework (no flax/optax available)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size_bytes(tree) -> int:
+    """Total bytes of all array leaves."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for leaf in leaves:
+        if hasattr(leaf, "dtype") and hasattr(leaf, "size"):
+            total += int(leaf.size) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_count_params(tree) -> int:
+    """Total element count of all array leaves."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "size"))
+
+
+def tree_zeros_like(tree, dtype=None):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree)
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)
+
+
+def tree_global_norm(tree):
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree_util.tree_leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree_util.tree_map(lambda x: x * s, tree)

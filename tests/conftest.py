@@ -1,0 +1,28 @@
+"""Test fixtures. NOTE: no XLA_FLAGS here by design — smoke tests and
+benches must see the real (single) device; distributed-engine tests spawn
+subprocesses that set --xla_force_host_platform_device_count themselves."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run a python snippet in a subprocess with N fake CPU devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{proc.stdout[-4000:]}\n"
+            f"STDERR:\n{proc.stderr[-4000:]}")
+    return proc.stdout

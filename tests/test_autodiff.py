@@ -1,0 +1,69 @@
+"""The paper's backward equivalence (App. A.2): the explicitly-scheduled
+reverse NN-TGAR passes produce the same gradients as jax.grad."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import GNNConfig
+from repro.core.autodiff import explicit_loss_and_grad
+from repro.core.mpgnn import loss_block
+from repro.core.strategies import global_batch_view, mini_batch_views
+from repro.graph import make_dataset
+from repro.models import make_gnn
+
+
+@pytest.mark.parametrize("model_name", ["gcn", "sage", "gat", "gat_e"])
+def test_explicit_backward_equals_autodiff(model_name):
+    if model_name == "gat_e":
+        g = make_dataset("alipay_like", num_nodes=500, seed=0)
+        edim = g.edge_features.shape[1]
+        nc = 2
+    else:
+        g = make_dataset("cora", seed=0).add_self_loops()
+        edim, nc = 0, 7
+    cfg = GNNConfig(model=model_name, num_layers=2, hidden_dim=16,
+                    num_classes=nc, feature_dim=g.node_features.shape[1],
+                    num_heads=4, edge_feature_dim=edim)
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg.feature_dim)
+    for view in [global_batch_view(g, 2),
+                 next(mini_batch_views(g, 2, batch_nodes=16, seed=1))]:
+        block = view.as_block(gcn_norm=(model_name == "gcn"))
+        loss, grads = explicit_loss_and_grad(model, params, block)
+        ref_l, ref_g = jax.value_and_grad(
+            lambda p: loss_block(model, p, block))(params)
+        assert abs(float(loss) - float(ref_l)) < 1e-6
+        for a, b in zip(jax.tree_util.tree_leaves(grads),
+                        jax.tree_util.tree_leaves(ref_g)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+
+def test_gradient_flows_along_reversed_edges():
+    """App. A.2's structural claim: in a directed chain a->b, the loss on b
+    produces a gradient on a's features (via the reversed edge), and the
+    loss on a produces NO gradient on b (no edge b->a)."""
+    from repro.graph.csr import Graph, build_block
+    feats = np.eye(2, 4, dtype=np.float32)
+    g = Graph(np.array([0], np.int32), np.array([1], np.int32), 2,
+              feats, np.array([0, 1], np.int32))
+    cfg = GNNConfig(model="gcn", num_layers=1, hidden_dim=4, num_classes=2,
+                    feature_dim=4)
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(0), 4)
+
+    def loss_on(node):
+        block = build_block(g, loss_mask=np.arange(2) == node,
+                            gcn_norm=False)
+
+        def f(x):
+            blk = block
+            blk.x = x
+            return loss_block(model, params, blk)
+        return jax.grad(f)(jnp.asarray(feats))
+
+    g_b = np.asarray(loss_on(1))      # loss on b: grad must reach a
+    assert np.abs(g_b[0]).max() > 0
+    g_a = np.asarray(loss_on(0))      # loss on a: no in-edges => no grads
+    assert np.abs(g_a).max() == 0

@@ -1,0 +1,60 @@
+"""Gradient accumulation == full-batch gradients (mean loss)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.arch.model as arch_model
+from repro.arch import build_model
+from repro.config import get_arch_config
+from repro.launch.microbatch import microbatched_value_and_grad, split_batch
+
+
+@pytest.mark.parametrize("n_micro", [2, 4])
+@pytest.mark.parametrize("unroll", [False, True])
+def test_microbatched_grads_match_full_batch(n_micro, unroll):
+    arch_model.LOSS_CHUNK = 16
+    cfg = get_arch_config("qwen3-4b").reduced().replace(
+        dtype="float32", vocab_size=256)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, 256, (8, 16)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, 256, (8, 16)),
+                                   jnp.int32)}
+    l0, g0 = jax.value_and_grad(model.loss)(params, batch)
+    l1, g1 = microbatched_value_and_grad(model.loss, n_micro,
+                                         unroll)(params, batch)
+    assert abs(float(l0) - float(l1)) < 1e-5
+    for a, b in zip(jax.tree_util.tree_leaves(g0),
+                    jax.tree_util.tree_leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_split_batch_handles_mrope_axis():
+    batch = {"tokens": jnp.zeros((8, 4), jnp.int32),
+             "mrope_positions": jnp.zeros((3, 8, 4), jnp.int32)}
+    mb = split_batch(batch, 4)
+    assert mb["tokens"].shape == (4, 2, 4)
+    assert mb["mrope_positions"].shape == (4, 3, 2, 4)
+
+
+def test_microbatch_with_vlm_inputs():
+    arch_model.LOSS_CHUNK = 16
+    cfg = get_arch_config("qwen2-vl-2b").reduced().replace(
+        dtype="float32", vocab_size=256)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    B, S = 4, 16
+    pos = np.broadcast_to(np.arange(S)[None], (B, S))
+    batch = {"embeds": jnp.asarray(rng.normal(size=(B, S, cfg.d_model)),
+                                   jnp.float32),
+             "labels": jnp.asarray(rng.integers(0, 256, (B, S)), jnp.int32),
+             "mrope_positions": jnp.asarray(np.stack([pos, pos, pos]),
+                                            jnp.int32)}
+    l0, g0 = jax.value_and_grad(model.loss)(params, batch)
+    l1, g1 = microbatched_value_and_grad(model.loss, 2)(params, batch)
+    assert abs(float(l0) - float(l1)) < 1e-5

@@ -1,0 +1,98 @@
+"""Auto-FSDP sharding rules: every produced spec must divide its dim, and
+the roofline helpers must parse HLO collectives correctly."""
+import numpy as np
+import pytest
+
+from repro.config import ASSIGNED_ARCHS, get_arch_config
+from repro.launch.roofline import parse_collective_bytes, model_flops
+from repro.config import INPUT_SHAPES
+
+
+def _axis_sizes(mesh_shape):
+    return dict(mesh_shape)
+
+
+class FakeMesh:
+    """Shape-only stand-in (no devices needed for spec derivation)."""
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def _check_specs(shapes, specs, mesh):
+    import jax
+    flat_s = jax.tree_util.tree_leaves(shapes)
+    flat_p = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(
+            x, jax.sharding.PartitionSpec))
+    assert len(flat_s) == len(flat_p)
+    for leaf, spec in zip(flat_s, flat_p):
+        for dim, axis in zip(leaf.shape, tuple(spec)):
+            if axis is None:
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            n = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % n == 0, (leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("multi", [False, True])
+def test_param_specs_divisible(arch, multi):
+    import jax
+    from repro.arch import build_model
+    from repro.launch import sharding as sh
+
+    cfg = get_arch_config(arch)
+    model = build_model(cfg)
+    shapes = model.param_shapes()
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16} if multi
+                    else {"data": 16, "model": 16})
+    specs = sh.param_specs(shapes, mesh, ("data",))
+    _check_specs(shapes, specs, mesh)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "jamba-1.5-large-398b",
+                                  "minicpm3-4b", "rwkv6-1.6b"])
+def test_cache_specs_divisible(arch):
+    import jax
+    from repro.arch import build_model
+    from repro.launch import sharding as sh
+
+    cfg = get_arch_config(arch)
+    model = build_model(cfg)
+    mesh = FakeMesh({"data": 16, "model": 16})
+    shapes = jax.eval_shape(lambda: model.init_cache(128, 32768))
+    specs = sh.cache_specs(shapes, mesh, ("data",))
+    _check_specs(shapes, specs, mesh)
+
+
+def test_parse_collective_bytes():
+    hlo = """
+  %ag = bf16[16,4096,2560]{2,1,0} all-gather(bf16[1,4096,2560]{2,1,0} %x), replica_groups=...
+  %ar = f32[100,10] all-reduce(f32[100,10] %y), to_apply=%sum
+  %rs.1 = f32[4,10]{1,0} reduce-scatter(f32[64,10]{1,0} %z), dimensions={0}
+  %cp = u32[8]{0} collective-permute(u32[8]{0} %w)
+  %nothing = f32[2,2] add(f32[2,2] %a, f32[2,2] %b)
+"""
+    got = parse_collective_bytes(hlo)
+    assert got["all-gather"] == 16 * 4096 * 2560 * 2
+    assert got["all-reduce"] == 100 * 10 * 4
+    assert got["reduce-scatter"] == 64 * 10 * 4        # operand bigger
+    assert got["collective-permute"] == 8 * 4
+    assert got["total"] == sum(got[k] for k in (
+        "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute"))
+
+
+def test_model_flops_scaling():
+    cfg = get_arch_config("qwen3-4b")
+    tr = model_flops(cfg, INPUT_SHAPES["train_4k"], 256)
+    pf = model_flops(cfg, INPUT_SHAPES["prefill_32k"], 256)
+    de = model_flops(cfg, INPUT_SHAPES["decode_32k"], 256)
+    # train is 3x prefill per token; decode is tiny
+    assert tr / (256 * 4096) == pytest.approx(3 * pf / (32 * 32768),
+                                              rel=1e-6)
+    assert de < pf / 1000
+    # MoE active < total flops basis
+    moe = get_arch_config("dbrx-132b")
+    assert moe.active_param_count() < 0.5 * moe.param_count()

@@ -1,0 +1,115 @@
+"""Training-strategy semantics (GraphView unification, §4.2/§2.3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import (hash_clusters, label_propagation_clusters,
+                                   louvain_clusters, modularity)
+from repro.core.strategies import (cluster_batch_views, global_batch_view,
+                                   mini_batch_views)
+from repro.core.subgraph import khop_subgraph_view, subgraph_size_stats
+from repro.graph import sbm_graph
+
+
+def _g(seed=0, n=300):
+    return sbm_graph(num_nodes=n, num_classes=4, feature_dim=8, p_in=0.05,
+                     p_out=0.005, seed=seed)
+
+
+def test_global_view_covers_everything():
+    g = _g()
+    v = global_batch_view(g, 2)
+    assert v.node_active is None and v.edge_active is None
+    assert v.loss_mask.sum() == g.train_mask.sum()
+
+
+def test_mini_batch_targets_subset_of_train():
+    g = _g(1)
+    for i, v in enumerate(mini_batch_views(g, 2, batch_nodes=16, seed=0,
+                                           steps=5)):
+        targets = np.where(v.loss_mask > 0)[0]
+        assert np.all(g.train_mask[targets])
+        assert len(targets) == 16
+        # every active edge endpoint is active at some layer
+        touched = v.node_active.max(axis=0) > 0
+        eact = v.edge_active.max(axis=0) > 0
+        assert np.all(touched[g.dst[eact]])
+
+
+def test_active_sets_shrink_with_depth():
+    """Layer-k active set (computing h^{k+1}) shrinks toward the targets
+    (paper: 'minimal number of layers per node')."""
+    g = _g(2)
+    targets = np.arange(6)
+    na, ea, lm, _ = khop_subgraph_view(g, targets, 3)
+    sizes = [(na[k] > 0).sum() for k in range(3)]
+    assert sizes[0] >= sizes[1] >= sizes[2]
+    assert sizes[2] >= len(targets)
+
+
+def test_neighbor_sampling_caps_fanin():
+    g = _g(3)
+    targets = np.arange(4)
+    rng = np.random.default_rng(0)
+    full = subgraph_size_stats(g, targets, 2)
+    na, ea, _, visited = khop_subgraph_view(g, targets, 2, neighbor_cap=2,
+                                            rng=rng)
+    assert visited.sum() <= full["touched_nodes"]
+
+
+def test_cluster_batch_respects_clusters():
+    g = _g(4)
+    clusters = hash_clusters(g, 10, seed=1)
+    v = next(cluster_batch_views(g, 2, clusters, clusters_per_batch=2,
+                                 halo_hops=0, seed=0))
+    chosen = set(v.meta["clusters"])
+    active = v.node_active[0] > 0
+    assert set(np.unique(clusters[active])) <= chosen
+    # all active edges internal to the active set
+    eact = v.edge_active[0] > 0
+    assert np.all(active[g.src[eact]]) and np.all(active[g.dst[eact]])
+
+
+def test_cluster_halo_grows_active_set():
+    g = _g(5)
+    clusters = hash_clusters(g, 10, seed=2)
+    v0 = next(cluster_batch_views(g, 2, clusters, 2, halo_hops=0, seed=3))
+    v1 = next(cluster_batch_views(g, 2, clusters, 2, halo_hops=1, seed=3))
+    v2 = next(cluster_batch_views(g, 2, clusters, 2, halo_hops=2, seed=3))
+    a0 = (v0.node_active[0] > 0).sum()
+    a1 = (v1.node_active[0] > 0).sum()
+    a2 = (v2.node_active[0] > 0).sum()
+    assert a0 <= a1 <= a2
+    # loss is always restricted to cluster members
+    assert np.array_equal(v0.loss_mask, v1.loss_mask)
+
+
+def test_community_detection_beats_hash():
+    """LPA/Louvain find the planted SBM communities; hashing doesn't
+    (Table A1: cluster-batch needs community structure)."""
+    g = _g(6, n=400)
+    lpa = label_propagation_clusters(g, iters=6, seed=0)
+    hsh = hash_clusters(g, int(lpa.max()) + 1, seed=0)
+    assert modularity(g, lpa) > modularity(g, hsh) + 0.2
+    lou = louvain_clusters(g, seed=0)
+    assert modularity(g, lou) > modularity(g, hsh) + 0.2
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_cluster_split_bounds_size(seed):
+    g = _g(seed % 17)
+    cl = label_propagation_clusters(g, max_cluster_size=40, iters=3,
+                                    seed=seed)
+    sizes = np.bincount(cl)
+    assert sizes.max() <= 40
+    assert sizes.sum() == g.num_nodes
+
+
+def test_subgraph_explosion_stats():
+    """Dense graphs: few targets touch a large graph fraction (paper §1's
+    motivation for cluster-batch / hybrid parallelism)."""
+    g = sbm_graph(num_nodes=400, num_classes=2, feature_dim=4, p_in=0.1,
+                  p_out=0.05, seed=0)
+    stats = subgraph_size_stats(g, np.arange(4), 2)
+    assert stats["touched_frac"] > 0.5
