@@ -1,11 +1,17 @@
-"""Kernel micro-benchmarks: Pallas (interpret) vs jnp oracle.
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp oracle — plus the
+end-to-end Sum-stage benchmark over the aggregation backends.
 
 On this CPU container interpret-mode timings measure the Python emulation,
 not TPU performance — the CSV documents call latency + the (shape, VMEM)
-choices; TPU timing comes from running the same ops on hardware.
+choices; TPU timing comes from running the same ops on hardware. The
+``aggregate`` bench additionally writes BENCH_aggregate.json so successive
+PRs can track the hot path (paper Fig. A3: 76% of runtime) end to end.
 """
 from __future__ import annotations
 
+import json
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -52,3 +58,57 @@ def kernels():
     us_ref = time_call(lambda *a: mha_ref(*a), q, kk, vv, iters=2)
     emit("kernels/flash_attention_pallas_interp", us,
          f"T={T};H={Hh};D={Dh};dense_ref_us={us_ref:.0f}")
+
+
+def aggregate(out_json: str = "BENCH_aggregate.json"):
+    """End-to-end TGAR layer forward under each aggregation backend.
+
+    Times ``forward_block`` (NN-T -> NN-G -> Sum -> NN-A, jitted) for one
+    model per combine mode, "reference" vs "csc", and dumps the rows to
+    ``out_json`` for the perf trajectory of the Sum-stage hot path.
+    """
+    import dataclasses
+
+    from repro.config import GNNConfig
+    from repro.core.mpgnn import forward_block
+    from repro.core.strategies import global_batch_view
+    from repro.graph import sbm_graph
+    from repro.models import make_gnn
+
+    num_nodes, hidden = 2000, 32
+    g = sbm_graph(num_nodes=num_nodes, num_classes=4, feature_dim=hidden,
+                  p_in=0.01, p_out=0.002, seed=0).add_self_loops()
+    rows = []
+    for model_name, combine_mode, heads in (
+            ("gcn", "sum", 1), ("sage", "mean", 1), ("sage_max", "max", 1),
+            ("gat", "softmax", 4)):
+        gcn_norm = model_name == "gcn"
+        cfg = GNNConfig(model=model_name, num_layers=2, hidden_dim=hidden,
+                        num_classes=4, feature_dim=hidden, num_heads=heads)
+        model = make_gnn(cfg)
+        params = model.init(jax.random.PRNGKey(0), hidden)
+        view = global_batch_view(g, cfg.num_layers)
+        for backend in ("reference", "csc"):
+            m = dataclasses.replace(model, aggregate_backend=backend)
+            block = view.as_block(gcn_norm=gcn_norm,
+                                  csc_plan=backend == "csc")
+            fwd = jax.jit(lambda p, b, m_=m: forward_block(m_, p, b))
+            us = time_call(fwd, params, block, iters=3)
+            emit(f"aggregate/{model_name}_{backend}", us,
+                 f"combine={combine_mode};N={g.num_nodes};E={g.num_edges};"
+                 f"H={heads};D={hidden}")
+            rows.append({"model": model_name, "combine": combine_mode,
+                         "backend": backend, "us_per_call": round(us, 1),
+                         "num_nodes": g.num_nodes,
+                         "num_edges": g.num_edges,
+                         "heads": heads, "hidden_dim": hidden,
+                         "num_layers": cfg.num_layers,
+                         "interpret_mode": jax.default_backend() != "tpu"})
+    with open(out_json, "w") as f:
+        json.dump({"benchmark": "aggregate_layer_forward",
+                   "device": jax.default_backend(),
+                   "note": ("csc timings are Pallas interpret-mode off-TPU "
+                            "(Python emulation, not kernel speed); the "
+                            "trajectory is meaningful per backend/device"),
+                   "rows": rows}, f, indent=2)
+    print(f"wrote {out_json} ({len(rows)} rows)")

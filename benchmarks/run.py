@@ -31,6 +31,7 @@ def main(argv=None) -> int:
         "figA3": gnn_scaling.figA3_stage_breakdown,
         "appB": lambda: gnn_scaling.appB_halo_ablation(steps),
         "kernels": kernels_bench.kernels,
+        "aggregate": kernels_bench.aggregate,
         "roofline": roofline_table.roofline_table,
     }
     only = set(args.only.split(",")) if args.only else None

@@ -34,6 +34,9 @@ def main():
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--partition", default="1d_src",
                     choices=["1d_src", "1d_dst", "vertex_cut"])
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "csc"],
+                    help="Sum-stage aggregation backend")
     args = ap.parse_args()
 
     g = make_dataset("alipay_like", num_nodes=args.nodes, seed=0)
@@ -43,7 +46,8 @@ def main():
 
     cfg = GNNConfig(model="gat_e", num_layers=2, hidden_dim=32,
                     num_classes=2, feature_dim=g.node_features.shape[1],
-                    edge_feature_dim=g.edge_features.shape[1], num_heads=4)
+                    edge_feature_dim=g.edge_features.shape[1], num_heads=4,
+                    aggregate_backend=args.backend)
     model = make_gnn(cfg)
 
     sg = build_partitions(g, args.workers, method=args.partition,

@@ -1,7 +1,10 @@
 """Quickstart: train a GCN with GraphTheta-style global-batch in ~30 lines.
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --backend csc   # Pallas Sum stage
 """
+import argparse
+
 import jax
 
 from repro.config import GNNConfig
@@ -12,15 +15,17 @@ from repro.models import make_gnn
 from repro.optim import adam
 
 
-def main():
+def main(backend: str = "reference"):
     g = make_dataset("cora", seed=0).add_self_loops()
     cfg = GNNConfig(model="gcn", num_layers=2, hidden_dim=32, num_classes=7,
-                    feature_dim=g.node_features.shape[1])
+                    feature_dim=g.node_features.shape[1],
+                    aggregate_backend=backend)
     model = make_gnn(cfg)
     params = model.init(jax.random.PRNGKey(0), cfg.feature_dim)
     opt = adam(1e-2, weight_decay=5e-4)
     state = opt.init(params)
-    block = global_batch_view(g, cfg.num_layers).as_block()
+    block = global_batch_view(g, cfg.num_layers).as_block(
+        csc_plan=backend == "csc")
 
     @jax.jit
     def step(params, state):
@@ -39,4 +44,8 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "csc"],
+                    help="Sum-stage aggregation backend")
+    main(ap.parse_args().backend)

@@ -269,7 +269,7 @@ def list_arch_configs():
 
 @dataclass(frozen=True)
 class GNNConfig:
-    model: str = "gcn"              # gcn | sage | gat | gat_e
+    model: str = "gcn"              # gcn | sage | sage_max | gat | gat_e
     num_layers: int = 2
     hidden_dim: int = 16
     num_classes: int = 7
@@ -279,6 +279,9 @@ class GNNConfig:
     dropout: float = 0.5
     residual: bool = False
     mean_aggregate: bool = True     # mean vs sum neighbor aggregation
+    # Sum-stage aggregation backend: "reference" (jnp segment ops) or
+    # "csc" (Pallas CSC-blocked kernels; see repro.core.aggregate)
+    aggregate_backend: str = "reference"
 
 
 @dataclass(frozen=True)

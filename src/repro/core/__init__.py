@@ -1,5 +1,9 @@
 # The paper's primary contribution: NN-TGAR + hybrid-parallel distributed
 # graph training engine with flexible training strategies.
+from repro.core.aggregate import (
+    COMBINE_SPECS, AggregationBackend, CombineSpec, ShardContext, combine,
+    get_backend, register_backend,
+)
 from repro.core.tgar import (
     TGARLayer, segment_sum, segment_mean, segment_max, segment_softmax,
 )

@@ -14,6 +14,12 @@ phase) and partial aggregates move mirror→master (reduce phase); traffic is
 O(#mirrors) per layer, not O(edges) — the paper's "local message bombing"
 fix. Attention models (softmax combine) add a max- and a sum-reduce pass —
 the distributed segment-softmax.
+
+The per-shard Sum stage is the shared combine engine of
+:mod:`repro.core.aggregate`: shard-local partial aggregates run through the
+selected :class:`AggregationBackend` (``"reference"`` jnp segment ops or
+the ``"csc"`` Pallas kernels over per-shard cached CSCPlans) and are
+finalized through a :class:`ShardContext` wrapping the halo exchange.
 """
 from __future__ import annotations
 
@@ -26,9 +32,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.aggregate import ShardContext, combine, get_backend
 from repro.core.mpgnn import MPGNNModel
 from repro.core.partition import PartitionPlan, ShardedGraph
 from repro.core.tgar import TGARLayer, tree_take, NEG
+from repro.kernels.ops import CSCPlan
+from repro.utils.compat import shard_map
 
 Axis = str
 
@@ -96,7 +105,7 @@ def _bcast_tree(tree, shard, axis):
 
 
 def _layer_forward_sharded(layer: TGARLayer, lp, h, shard, k: int,
-                           axis: Axis):
+                           axis: Axis, backend=None):
     n_m_pad = shard["n_m_pad"]
     n_mir_pad = shard["n_mir_pad"]
     n_tot = n_m_pad + n_mir_pad
@@ -117,36 +126,19 @@ def _layer_forward_sharded(layer: TGARLayer, lp, h, shard, k: int,
     msg = layer.gather(lp, n_src, n_dst, shard["edge_attr"],
                        shard["edge_weight"], em)
 
+    # Sum: shard-local partial aggregation (shared combine engine) +
+    # mirror->master halo finalize via the exchange plan
     red = functools.partial(_reduce_array, send_idx=shard["send_idx"],
                             send_mask=shard["send_mask"],
                             recv_slot=shard["recv_slot"],
                             recv_mask=shard["recv_mask"],
                             n_m_pad=n_m_pad, axis=axis)
-
-    if layer.combine in ("sum", "mean"):
-        val = msg["value"] * em[:, None, None]
-        agg = jax.ops.segment_sum(val, dst, n_tot)
-        M = agg[:n_m_pad] + red(agg[n_m_pad:], op="sum")
-        if layer.combine == "mean":
-            deg = jax.ops.segment_sum(em, dst, n_tot)
-            deg_m = deg[:n_m_pad] + red(deg[n_m_pad:], op="sum")
-            M = M / jnp.maximum(deg_m, 1e-9)[:, None, None]
-    elif layer.combine == "softmax":
-        # distributed segment-softmax: global max pass + global sum pass
-        logit = jnp.where(em[:, None] > 0, msg["logit"], NEG)
-        lmax = jax.ops.segment_max(logit, dst, n_tot)
-        lmax = jnp.maximum(lmax, NEG)   # clamp empty segments (-inf)
-        gmax_m = jnp.maximum(lmax[:n_m_pad], red(lmax[n_m_pad:], op="max"))
-        gmax_mir = _bcast_tree(gmax_m, shard, axis)
-        gmax_all = jnp.concatenate([gmax_m, gmax_mir], axis=0)
-        ex = jnp.exp(logit - gmax_all[dst]) * em[:, None]
-        den = jax.ops.segment_sum(ex, dst, n_tot)
-        num = jax.ops.segment_sum(ex[..., None] * msg["value"], dst, n_tot)
-        den_m = den[:n_m_pad] + red(den[n_m_pad:], op="sum")
-        num_m = num[:n_m_pad] + red(num[n_m_pad:], op="sum")
-        M = num_m / jnp.maximum(den_m, 1e-9)[..., None]
-    else:
-        raise ValueError(layer.combine)
+    ctx = ShardContext(
+        n_master=n_m_pad,
+        reduce=lambda arr, op: red(arr, op=op),
+        bcast=lambda arr: _bcast_tree(arr, shard, axis))
+    M = combine(layer.combine, msg, dst, n_tot, em, backend=backend,
+                plan=shard.get("csc_plan"), shard=ctx)
 
     h_next = layer.apply(lp, h, M)
     h_next = h_next * shard["node_active"][k][:, None]
@@ -163,15 +155,23 @@ class HybridParallelEngine:
 
     Requires a mesh whose ``axis`` has exactly ``plan.P`` devices. The same
     engine serves training (``train_step``) and inference (``infer``) — the
-    paper's unified implementation.
+    paper's unified implementation. ``backend`` selects the Sum-stage
+    aggregation backend (defaults to the model's ``aggregate_backend``);
+    with ``"csc"`` the per-shard CSCPlans are built once at staging time
+    and reused by every batch/view — the paper's reused CSC indexing.
     """
 
     def __init__(self, model: MPGNNModel, sharded: ShardedGraph,
-                 mesh: Optional[Mesh] = None, axis: Axis = "graph"):
+                 mesh: Optional[Mesh] = None, axis: Axis = "graph",
+                 backend=None):
         self.model = model
         self.sg = sharded
         self.plan = sharded.plan
         self.axis = axis
+        if backend is None:
+            backend = getattr(model, "aggregate_backend", "reference")
+        self.backend = get_backend(backend)
+        self._csc_meta = None
         if mesh is None:
             devs = np.array(jax.devices()[: self.plan.P])
             if devs.size < self.plan.P:
@@ -203,6 +203,13 @@ class HybridParallelEngine:
         }
         if sg.edge_attr is not None:
             data["edge_attr"] = shd(sg.edge_attr)
+        if self.backend.name == "csc":
+            plans = plan.csc_plans()
+            self._csc_meta = plans[0]
+            data["csc_gather"] = shd(np.stack(
+                [p.gather_idx for p in plans]))
+            data["csc_local"] = shd(np.stack(
+                [p.local_ids for p in plans]))
         return data
 
     def stage_view(self, view_arrays: dict):
@@ -234,13 +241,20 @@ class HybridParallelEngine:
         shard["n_mir_pad"] = self.plan.n_mir_pad
         if "edge_attr" not in shard:
             shard["edge_attr"] = None
+        if "csc_gather" in shard:
+            meta = self._csc_meta
+            shard["csc_plan"] = CSCPlan(
+                shard.pop("csc_gather"), shard.pop("csc_local"),
+                meta.num_blocks, meta.block_n, meta.block_e,
+                meta.num_segments, meta.num_edges)
         return shard
 
     def _forward_local(self, params, shard):
         h = shard["x"]
         for k, layer in enumerate(self.model.layers):
             h = _layer_forward_sharded(layer, params["layers"][k], h,
-                                       shard, k, self.axis)
+                                       shard, k, self.axis,
+                                       backend=self.backend)
         return self.model.decode(params, h)
 
     def _local_objective(self, params, shard):
@@ -277,11 +291,10 @@ class HybridParallelEngine:
                 grads = jax.lax.psum(grads, self.axis)
                 return loss, grads
 
-            return jax.shard_map(
+            return shard_map(
                 shard_fn, mesh=self.mesh,
                 in_specs=(P(), specs_data, specs_view),
                 out_specs=(P(), P()),
-                check_vma=False,
             )(params, data, view)
 
         return fn
@@ -314,11 +327,10 @@ class HybridParallelEngine:
                 logits = self._forward_local(params, shard)
                 return logits[None]
 
-            out = jax.shard_map(
+            out = shard_map(
                 shard_fn, mesh=self.mesh,
                 in_specs=(P(), specs_data, specs_view),
                 out_specs=P(self.axis),
-                check_vma=False,
             )(params, self._device_data, view)
             return out  # (P, n_m_pad, C) aligned with plan.masters
 

@@ -24,6 +24,10 @@ class MPGNNModel:
     layers: Sequence[TGARLayer]
     num_classes: int
     decoder_hidden: int = 0          # optional extra FC before the decoder
+    # Sum-stage aggregation backend ("reference" | "csc", see
+    # repro.core.aggregate); the "csc" kernel path additionally needs a
+    # CSCPlan on the block (build_block(csc_plan=True)) or engine shard
+    aggregate_backend: str = "reference"
 
     @property
     def K(self):
@@ -44,7 +48,8 @@ class MPGNNModel:
         h = block.x
         n = block.num_nodes_padded
         for k, layer in enumerate(self.layers):
-            h = layer_forward_block(layer, params["layers"][k], h, block, k, n)
+            h = layer_forward_block(layer, params["layers"][k], h, block, k,
+                                    n, backend=self.aggregate_backend)
         return h
 
     def decode(self, params, h):

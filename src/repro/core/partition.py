@@ -49,6 +49,10 @@ class PartitionPlan:
     send_mask: np.ndarray             # (P, P, s_pad) f32
     recv_slot: np.ndarray             # (P, P, s_pad) int32 mirror slots
     recv_mask: np.ndarray             # (P, P, s_pad) f32
+    # per-shard CSCPlans for the "csc" aggregation backend, cached by
+    # (block_n, block_e) — built once per partitioning, reused by every
+    # batch/view the engine stages (paper §4.2 reused indexing)
+    _csc_plans: dict = field(default_factory=dict, repr=False)
 
     @property
     def n_m_pad(self) -> int:
@@ -65,6 +69,19 @@ class PartitionPlan:
     @property
     def s_pad(self) -> int:
         return int(self.send_idx.shape[2])
+
+    def csc_plans(self, block_n: int = 128, block_e: int = 256):
+        """One CSCPlan per partition over its local destination ids
+        (segments = the shard's [masters ; mirrors] axis), all with
+        identical padded shapes so the engine can stack them (P, nb, L)
+        and shard them over the worker group."""
+        key = (block_n, block_e)
+        if key not in self._csc_plans:
+            from repro.kernels.ops import build_csc_plans_stacked
+            n_tot = self.n_m_pad + self.n_mir_pad
+            self._csc_plans[key] = build_csc_plans_stacked(
+                self.dst_local, n_tot, block_n, block_e)
+        return self._csc_plans[key]
 
 
 @dataclass

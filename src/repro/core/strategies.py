@@ -28,9 +28,13 @@ class GraphView:
     loss_mask: np.ndarray                # (N,) f32
     meta: dict
 
-    def as_block(self, gcn_norm: bool = True) -> GraphBlock:
+    def as_block(self, gcn_norm: bool = True,
+                 csc_plan: bool = False) -> GraphBlock:
+        """``csc_plan=True`` attaches the graph's cached CSCPlan (shared by
+        all views — only the activity masks differ) for the "csc"
+        aggregation backend."""
         block = build_block(self.graph, loss_mask=self.loss_mask > 0,
-                            gcn_norm=gcn_norm)
+                            gcn_norm=gcn_norm, csc_plan=csc_plan)
         block.node_active = self.node_active
         block.edge_active = self.edge_active
         return block

@@ -12,7 +12,16 @@ Combine modes supported by Sum (paper §3.1: "non-parameterized method like
 averaging, concatenation or a parameterized one"):
   - "sum"     — plain Σ of edge messages per destination
   - "mean"    — Σ / active-degree
+  - "max"     — per-feature max over active in-edges (max-pooling SAGE)
   - "softmax" — attention-style normalized Σ (GAT / GAT-E)
+
+The Sum stage itself lives in :mod:`repro.core.aggregate`: one combine
+implementation shared with the distributed engine, dispatched over the
+``CombineSpec`` registry and executed by a pluggable
+:class:`~repro.core.aggregate.AggregationBackend` — ``"reference"`` (the
+jnp segment ops below) or ``"csc"`` (the Pallas CSC-blocked kernels in
+:mod:`repro.kernels`, fed by the ``CSCPlan`` cached on the GraphBlock).
+``combine_messages`` here is the thin single-block entry point.
 """
 from __future__ import annotations
 
@@ -22,13 +31,14 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-NEG = -1e30
+from repro.core import aggregate as agg
+
+NEG = agg.NEG           # one masking sentinel, defined in kernels/segment_sum
 
 
 # ---------------------------------------------------------------------------
-# segment primitives (the Sum stage). The Pallas kernel in
-# repro/kernels/segment_sum.py implements the same contract for TPU; the
-# jnp versions here are the portable reference used on CPU and in dry-runs.
+# segment primitives: the portable jnp oracles of the Sum stage, kept as
+# the "reference" backend's math and for property tests / stage benches.
 # ---------------------------------------------------------------------------
 
 
@@ -77,7 +87,8 @@ class TGARLayer:
         msg is {"value": (E,H,D)} and, for combine == "softmax",
         additionally {"logit": (E,H)}.
     apply(params, h, M) -> h_next                  # NN-A, per node
-    combine: "sum" | "mean" | "softmax"            # Sum stage semantics
+    combine: "sum" | "mean" | "max" | "softmax"    # Sum stage semantics
+        (any mode registered in aggregate.COMBINE_SPECS)
     out_dim / heads: bookkeeping for model composition.
     """
     name: str
@@ -98,25 +109,27 @@ def tree_take(tree, idx):
     return jax.tree_util.tree_map(lambda a: a[idx], tree)
 
 
-def combine_messages(layer: TGARLayer, msg, dst, num_segments, edge_mask):
-    """The Sum stage on a single block (non-distributed path)."""
-    value = msg["value"] * edge_mask[:, None, None]
-    if layer.combine == "softmax":
-        return segment_softmax(msg["logit"], msg["value"], dst, num_segments,
-                               edge_mask)
-    total = segment_sum(value, dst, num_segments)
-    if layer.combine == "mean":
-        deg = segment_sum(edge_mask, dst, num_segments)
-        return total / jnp.maximum(deg, 1e-9)[:, None, None]
-    return total
+def combine_messages(layer: TGARLayer, msg, dst, num_segments, edge_mask,
+                     backend=None, plan=None):
+    """The Sum stage on a single block (non-distributed path).
+
+    Delegates to the shared combine engine; ``backend`` selects the
+    aggregation implementation ("reference" when None) and ``plan`` is the
+    graph's cached CSCPlan for the kernel path.
+    """
+    return agg.combine(layer.combine, msg, dst, num_segments, edge_mask,
+                       backend=backend, plan=plan)
 
 
 def layer_forward_block(layer: TGARLayer, params, h, block, layer_idx: int,
-                        num_nodes: int):
+                        num_nodes: int, backend=None):
     """Forward one TGAR layer on a GraphBlock (whole/sub-graph in one shard).
 
     Applies the per-layer active sets (paper §4.2) so that a mini-batch
-    computes exactly the k-hop neighborhood, nothing more.
+    computes exactly the k-hop neighborhood, nothing more. ``backend``
+    picks the Sum-stage aggregation backend; the block's cached
+    ``csc_plan`` (built once per graph, reused by every view and batch —
+    the paper's reused CSC indexing) feeds the ``"csc"`` kernel path.
     """
     edge_mask = block.edge_mask
     node_act = None
@@ -131,7 +144,9 @@ def layer_forward_block(layer: TGARLayer, params, h, block, layer_idx: int,
     ea = block.edge_attr
     msg = layer.gather(params, n_src, n_dst, ea, block.edge_weight,
                        edge_mask)                         # NN-G
-    M = combine_messages(layer, msg, block.dst, num_nodes, edge_mask)  # Sum
+    M = combine_messages(layer, msg, block.dst, num_nodes, edge_mask,
+                         backend=backend,
+                         plan=getattr(block, "csc_plan", None))  # Sum
     h_next = layer.apply(params, h, M)                    # NN-A
     if node_act is not None:
         h_next = h_next * node_act[:, None]

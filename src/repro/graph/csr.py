@@ -31,6 +31,9 @@ class Graph:
     # CSR/CSC built lazily
     _csr: Optional[tuple] = field(default=None, repr=False)
     _csc: Optional[tuple] = field(default=None, repr=False)
+    # cached CSCPlans for the blocked aggregation kernels, keyed by
+    # (n_pad, e_pad, block_n, block_e) — built once, shared by every view
+    _csc_plans: dict = field(default_factory=dict, repr=False)
 
     @property
     def num_edges(self) -> int:
@@ -75,6 +78,22 @@ class Graph:
         return (1.0 / np.sqrt(deg[self.src] * deg[self.dst])).astype(
             np.float32)
 
+    def csc_plan(self, pad_nodes: int = 0, pad_edges: int = 0,
+                 block_n: int = 128, block_e: int = 256):
+        """Cached CSCPlan over the (padded) destination ids — the reused
+        indexing of paper §4.2: every view/batch of this graph shares it
+        (views change activity masks, never the edge layout)."""
+        n_pad = max(pad_nodes, self.num_nodes)
+        e_pad = max(pad_edges, self.num_edges)
+        key = (n_pad, e_pad, block_n, block_e)
+        if key not in self._csc_plans:
+            from repro.kernels.ops import build_csc_plan
+            ids = np.zeros(e_pad, np.int32)
+            ids[: self.num_edges] = self.dst
+            self._csc_plans[key] = build_csc_plan(ids, n_pad, block_n,
+                                                  block_e)
+        return self._csc_plans[key]
+
     def add_self_loops(self) -> "Graph":
         loops = np.arange(self.num_nodes, dtype=np.int32)
         src = np.concatenate([self.src, loops])
@@ -117,6 +136,9 @@ class GraphBlock:
     # shape (K, N_pad) / (K, E_pad); None = all valid entries active
     node_active: Optional[np.ndarray] = None
     edge_active: Optional[np.ndarray] = None
+    # cached CSCPlan (repro.kernels.ops) for the "csc" aggregation backend;
+    # None keeps the reference jnp segment ops
+    csc_plan: Optional[object] = None
 
     @property
     def num_nodes_padded(self) -> int:
@@ -129,8 +151,10 @@ class GraphBlock:
 
 def build_block(g: Graph, pad_nodes: int = 0, pad_edges: int = 0,
                 loss_mask: Optional[np.ndarray] = None,
-                gcn_norm: bool = True) -> GraphBlock:
-    """Whole-graph block (global-batch view)."""
+                gcn_norm: bool = True,
+                csc_plan: bool = False) -> GraphBlock:
+    """Whole-graph block (global-batch view). ``csc_plan=True`` attaches
+    the graph's cached CSCPlan so the "csc" aggregation backend can run."""
     n, m = g.num_nodes, g.num_edges
     n_pad = max(pad_nodes, n)
     e_pad = max(pad_edges, m)
@@ -156,7 +180,9 @@ def build_block(g: Graph, pad_nodes: int = 0, pad_edges: int = 0,
     if g.edge_features is not None:
         ea = np.zeros((e_pad, g.edge_features.shape[1]), np.float32)
         ea[:m] = g.edge_features
-    return GraphBlock(src, dst, emask, nmask, x, y, lm, ew, ea)
+    plan = g.csc_plan(n_pad, e_pad) if csc_plan else None
+    return GraphBlock(src, dst, emask, nmask, x, y, lm, ew, ea,
+                      csc_plan=plan)
 
 
 # ---------------------------------------------------------------------------
@@ -165,7 +191,7 @@ def build_block(g: Graph, pad_nodes: int = 0, pad_edges: int = 0,
 
 _BLOCK_FIELDS = ("src", "dst", "edge_mask", "node_mask", "x", "y",
                  "loss_mask", "edge_weight", "edge_attr", "node_active",
-                 "edge_active")
+                 "edge_active", "csc_plan")
 
 
 def _block_flatten(b: GraphBlock):

@@ -10,7 +10,10 @@ scratch, each chunk rescales by exp(m_prev − m_new).
 
 Same CSC-blocked layout as segment_sum.py: destinations tiled into BN-row
 blocks, each owning a contiguous padded edge slice (built once per graph by
-ops.build_csc_plan — the paper's reused CSC indexing).
+ops.build_csc_plan — the paper's reused CSC indexing). Reached from the
+forward paths through the ``"csc"`` backend of :mod:`repro.core.aggregate`
+(GAT/GAT-E ``softmax`` combine on a single shard); multi-head (E, H, D)
+messages run one launch per head via ``ops.edge_softmax_op``.
 """
 from __future__ import annotations
 
@@ -21,7 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG = -1e30
+from repro.kernels.segment_sum import NEG
 
 
 def _edge_softmax_kernel(ids_ref, logit_ref, val_ref, out_ref,

@@ -13,22 +13,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.segment_sum import segment_sum_csc
+from repro.kernels.segment_sum import (segment_sum_csc, segment_max_csc,
+                                       NEG)
 from repro.kernels.wkv6 import wkv6 as _wkv6_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 
 
 # ---------------------------------------------------------------------------
-# segment sum: host plan + device op
+# segment sum / max: host plan + device ops
 # ---------------------------------------------------------------------------
 
 
 @dataclass(frozen=True)
 class CSCPlan:
-    """Per-graph padded edge layout for the blocked aggregation kernel.
+    """Per-graph padded edge layout for the blocked aggregation kernels.
 
     Built once per graph (the paper's reused CSC indexing); all views and
     batches reuse it — only the per-edge messages change between steps.
+    Registered as a jax pytree (index arrays are leaves, the block geometry
+    is static aux data) so plans ride along GraphBlocks and engine shards
+    through ``jit`` / ``shard_map`` / ``grad``.
     """
     gather_idx: np.ndarray    # (nb, L_pad) int32 into edge axis (E = pad row)
     local_ids: np.ndarray     # (nb, L_pad) int32 in [0, BN]; BN = padding
@@ -39,8 +43,24 @@ class CSCPlan:
     num_edges: int
 
 
+def _plan_flatten(p: CSCPlan):
+    return ((p.gather_idx, p.local_ids),
+            (p.num_blocks, p.block_n, p.block_e, p.num_segments,
+             p.num_edges))
+
+
+def _plan_unflatten(aux, children):
+    return CSCPlan(children[0], children[1], *aux)
+
+
+jax.tree_util.register_pytree_node(CSCPlan, _plan_flatten, _plan_unflatten)
+
+
 def build_csc_plan(segment_ids: np.ndarray, num_segments: int,
-                   block_n: int = 128, block_e: int = 256) -> CSCPlan:
+                   block_n: int = 128, block_e: int = 256,
+                   l_pad: int = 0) -> CSCPlan:
+    """``l_pad`` > 0 forces the padded edge-slice length (so plans built for
+    different shards of one graph stack into a single (P, nb, L) array)."""
     ids = np.asarray(segment_ids)
     E = len(ids)
     order = np.argsort(ids, kind="stable").astype(np.int64)
@@ -51,7 +71,11 @@ def build_csc_plan(segment_ids: np.ndarray, num_segments: int,
                                                   * block_n, num_segments))
     lens = ends - starts
     l_max = int(lens.max()) if nb else 0
-    l_pad = max(block_e, ((l_max + block_e - 1) // block_e) * block_e)
+    l_min = max(block_e, ((l_max + block_e - 1) // block_e) * block_e)
+    if l_pad:
+        assert l_pad >= l_min and l_pad % block_e == 0, (l_pad, l_min)
+    else:
+        l_pad = l_min
     gather = np.full((nb, l_pad), E, np.int32)          # E = zero pad row
     local = np.full((nb, l_pad), block_n, np.int32)     # BN = dead row
     for b in range(nb):
@@ -61,25 +85,72 @@ def build_csc_plan(segment_ids: np.ndarray, num_segments: int,
     return CSCPlan(gather, local, nb, block_n, block_e, num_segments, E)
 
 
+def build_csc_plans_stacked(segment_ids_rows, num_segments: int,
+                            block_n: int = 128, block_e: int = 256):
+    """One plan per row of ``segment_ids_rows`` (P, E), all with identical
+    padded shapes — the per-shard reused plans of the distributed engine."""
+    rows = [np.asarray(r) for r in segment_ids_rows]
+    plans = [build_csc_plan(r, num_segments, block_n, block_e) for r in rows]
+    l_pad = max(p.gather_idx.shape[1] for p in plans)
+
+    def widen(p: CSCPlan) -> CSCPlan:
+        extra = l_pad - p.gather_idx.shape[1]
+        if not extra:
+            return p
+        gather = np.pad(p.gather_idx, ((0, 0), (0, extra)),
+                        constant_values=p.num_edges)     # zero pad row
+        local = np.pad(p.local_ids, ((0, 0), (0, extra)),
+                       constant_values=p.block_n)        # dead lane
+        return CSCPlan(gather, local, p.num_blocks, p.block_n, p.block_e,
+                       p.num_segments, p.num_edges)
+
+    return [widen(p) for p in plans]
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "num_segments", "block_n", "block_e", "interpret"))
-def _segment_sum_planned(data, gather_idx, local_ids, num_segments: int,
-                         block_n: int, block_e: int, interpret: bool):
+    "num_segments", "block_n", "block_e", "interpret", "op"))
+def _segment_reduce_planned(data, gather_idx, local_ids, num_segments: int,
+                            block_n: int, block_e: int, interpret: bool,
+                            op: str = "sum"):
     D = data.shape[1]
-    padded = jnp.concatenate([data, jnp.zeros((1, D), data.dtype)], axis=0)
+    pad_val = 0.0 if op == "sum" else NEG     # identity of the combine
+    pad_row = jnp.full((1, D), pad_val, data.dtype)
+    padded = jnp.concatenate([data, pad_row], axis=0)
     gathered = padded[gather_idx]                         # (nb, L_pad, D)
-    out = segment_sum_csc(gathered, local_ids, gather_idx.shape[0],
-                          block_n, block_e, interpret=interpret)
+    kern = segment_sum_csc if op == "sum" else segment_max_csc
+    out = kern(gathered, local_ids, gather_idx.shape[0],
+               block_n, block_e, interpret=interpret)
     return out[:num_segments]
+
+
+def _reshape_to_2d(data):
+    """(E,) / (E, D) / (E, H, D) -> ((E, prod(rest)), trailing_shape)."""
+    trailing = data.shape[1:]
+    return data.reshape(data.shape[0], -1), trailing
 
 
 def segment_sum_op(data: jax.Array, plan: CSCPlan,
                    interpret: bool = True) -> jax.Array:
-    """data (E, D) float -> (num_segments, D), via the Pallas kernel."""
+    """data (E,)/(E, D)/(E, H, D) float -> (num_segments, ...trailing), via
+    the Pallas CSC kernel (multi-head messages fold into the lane axis)."""
     assert data.shape[0] == plan.num_edges
-    return _segment_sum_planned(
-        data, jnp.asarray(plan.gather_idx), jnp.asarray(plan.local_ids),
-        plan.num_segments, plan.block_n, plan.block_e, interpret)
+    flat, trailing = _reshape_to_2d(data)
+    out = _segment_reduce_planned(
+        flat, jnp.asarray(plan.gather_idx), jnp.asarray(plan.local_ids),
+        plan.num_segments, plan.block_n, plan.block_e, interpret, "sum")
+    return out.reshape((plan.num_segments,) + trailing)
+
+
+def segment_max_op(data: jax.Array, plan: CSCPlan,
+                   interpret: bool = True) -> jax.Array:
+    """Masked segment max; empty segments come back as NEG (callers clamp,
+    matching the -inf identity of ``jax.ops.segment_max``)."""
+    assert data.shape[0] == plan.num_edges
+    flat, trailing = _reshape_to_2d(data)
+    out = _segment_reduce_planned(
+        flat, jnp.asarray(plan.gather_idx), jnp.asarray(plan.local_ids),
+        plan.num_segments, plan.block_n, plan.block_e, interpret, "max")
+    return out.reshape((plan.num_segments,) + trailing)
 
 
 # ---------------------------------------------------------------------------
@@ -153,10 +224,24 @@ def _edge_softmax_planned(logits, values, gather_idx, local_ids,
 
 def edge_softmax_op(logits: jax.Array, values: jax.Array, plan: CSCPlan,
                     interpret: bool = True) -> jax.Array:
-    """Fused GAT aggregation: logits (E,), values (E, D) ->
-    (num_segments, D) of softmax-weighted neighbor sums."""
+    """Fused GAT aggregation: softmax-weighted neighbor sums.
+
+    Single-head: logits (E,), values (E, D) -> (num_segments, D).
+    Multi-head:  logits (E, H), values (E, H, D) -> (num_segments, H, D);
+    heads share the CSC plan and run as independent kernel launches (the
+    gather layout depends only on the destination ids, not the head).
+    """
     assert logits.shape[0] == plan.num_edges
-    return _edge_softmax_planned(
-        logits, values, jnp.asarray(plan.gather_idx),
-        jnp.asarray(plan.local_ids), plan.num_segments, plan.block_n,
-        plan.block_e, interpret)
+    g_idx = jnp.asarray(plan.gather_idx)
+    l_ids = jnp.asarray(plan.local_ids)
+    if logits.ndim == 1:
+        return _edge_softmax_planned(
+            logits, values, g_idx, l_ids, plan.num_segments, plan.block_n,
+            plan.block_e, interpret)
+    assert logits.ndim == 2 and values.ndim == 3, (logits.shape,
+                                                   values.shape)
+    heads = [_edge_softmax_planned(
+        logits[:, h], values[:, h, :], g_idx, l_ids, plan.num_segments,
+        plan.block_n, plan.block_e, interpret)
+        for h in range(logits.shape[1])]
+    return jnp.stack(heads, axis=1)

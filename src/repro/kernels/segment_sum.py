@@ -18,6 +18,15 @@ VMEM).
 Host-side planning (``build_csc_plan`` in ops.py) computes the padded
 edge gather indices once per graph — the paper's "reused CSR/CSC indexing"
 (§4.2): views/batches reuse the plan, only messages change.
+
+These kernels are wired into the forward paths through the Sum-stage
+backend registry in :mod:`repro.core.aggregate`: selecting the ``"csc"``
+:class:`~repro.core.aggregate.AggregationBackend` routes the combine of
+both ``layer_forward_block`` and the distributed engine through
+``segment_sum_csc`` / ``segment_max_csc`` / ``edge_softmax_csc`` (the
+``"reference"`` backend keeps the portable jnp segment ops). A ``max``
+combine (kernel below) covers max-pooling aggregators; multi-head
+``(E, H, D)`` messages are handled by the wrappers in ops.py.
 """
 from __future__ import annotations
 
@@ -26,6 +35,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+NEG = -1e30
 
 
 def _segment_sum_kernel(ids_ref, data_ref, out_ref, *, block_n: int):
@@ -67,6 +78,55 @@ def segment_sum_csc(gathered: jax.Array, local_ids: jax.Array,
     n_chunks = l_pad // block_e
     out = pl.pallas_call(
         functools.partial(_segment_sum_kernel, block_n=block_n),
+        grid=(num_blocks, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, block_e), lambda b, c: (b, c)),
+            pl.BlockSpec((1, block_e, d), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda b, c: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_blocks * block_n, d),
+                                       gathered.dtype),
+        interpret=interpret,
+    )(local_ids, gathered)
+    return out
+
+
+def _segment_max_kernel(ids_ref, data_ref, out_ref, *, block_n: int):
+    """Masked per-destination max over one (node_block, edge_chunk) step.
+
+    No one-hot matmul here — max has no MXU form — so the chunk expands to
+    a (BE, BN, D) masked candidate tensor on the VPU. Padding lanes
+    (id == BN) match no destination row and empty rows stay at NEG.
+    """
+    chunk = pl.program_id(1)
+
+    @pl.when(chunk == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, NEG)
+
+    ids = ids_ref[0]                                    # (BE,)
+    data = data_ref[0]                                  # (BE, D)
+    onehot = ids[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (ids.shape[0], block_n), 1)          # (BE, BN) bool
+    cand = jnp.where(onehot[:, :, None], data[:, None, :],
+                     jnp.asarray(NEG, data.dtype))      # (BE, BN, D)
+    out_ref[...] = jnp.maximum(out_ref[...], jnp.max(cand, axis=0))
+
+
+def segment_max_csc(gathered: jax.Array, local_ids: jax.Array,
+                    num_blocks: int, block_n: int,
+                    block_e: int = 256, interpret: bool = False):
+    """Blocked segment-max; same layout contract as :func:`segment_sum_csc`.
+
+    Empty destination rows come back as ``NEG`` (callers clamp). Note the
+    (BE, BN, D) candidate tensor: for TPU VMEM keep block_e * block_n * D
+    modest (e.g. 256·128 rows at D<=64) or shrink ``block_e``.
+    """
+    nb, l_pad, d = gathered.shape
+    assert nb == num_blocks and l_pad % block_e == 0
+    n_chunks = l_pad // block_e
+    out = pl.pallas_call(
+        functools.partial(_segment_max_kernel, block_n=block_n),
         grid=(num_blocks, n_chunks),
         in_specs=[
             pl.BlockSpec((1, block_e), lambda b, c: (b, c)),

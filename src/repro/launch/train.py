@@ -110,14 +110,16 @@ def train_gnn(dataset: str, model_name: str, strategy: str, steps: int,
                                               shard_view(sg.plan, view))
             loss = float(loss)
         else:
-            block = view.as_block(gcn_norm=gcn_norm)
+            block = view.as_block(gcn_norm=gcn_norm,
+                                  csc_plan=cfg.aggregate_backend == "csc")
             params, opt_state, loss_v = local_step(params, opt_state, block)
             loss = float(loss_v)
         if step % eval_every == 0 or step == steps - 1:
             test_mask = (g.test_mask if g.test_mask is not None
                          else g.train_mask)
             gb = global_batch_view(g, cfg.num_layers).as_block(
-                gcn_norm=gcn_norm)
+                gcn_norm=gcn_norm,
+                csc_plan=cfg.aggregate_backend == "csc")
             acc = float(accuracy_block(model, params, gb,
                                        mask=test_mask.astype(np.float32)))
             history.append({"step": step, "loss": loss, "test_acc": acc})

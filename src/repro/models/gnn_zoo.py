@@ -59,7 +59,12 @@ def gcn_layer(in_dim: int, out_dim: int, activation: bool = True,
 
 
 def sage_layer(in_dim: int, out_dim: int, activation: bool = True,
-               name: str = "sage") -> TGARLayer:
+               name: str = "sage", aggregate: str = "mean") -> TGARLayer:
+    """GraphSAGE with a pluggable neighbor aggregator: ``aggregate`` is any
+    non-attention combine mode ("mean" default; "max" = max-pooling SAGE,
+    "sum" = GIN-flavored)."""
+    assert aggregate in ("mean", "max", "sum"), aggregate
+
     def init(key):
         k1, k2 = jax.random.split(key)
         return {"w_self": dense_init(k1, in_dim, out_dim),
@@ -77,7 +82,7 @@ def sage_layer(in_dim: int, out_dim: int, activation: bool = True,
         return jax.nn.relu(out) if activation else out
 
     return TGARLayer(name, init, transform, gather, apply,
-                     combine="mean", out_dim=out_dim, heads=1)
+                     combine=aggregate, out_dim=out_dim, heads=1)
 
 
 # ---------------------------------------------------------------------------
@@ -182,8 +187,12 @@ def make_gnn(cfg, feature_dim: Optional[int] = None):
             layers.append(gcn_layer(dims[k], dims[k + 1], act,
                                     name=f"gcn{k}"))
         elif cfg.model == "sage":
+            agg = "mean" if cfg.mean_aggregate else "sum"
             layers.append(sage_layer(dims[k], dims[k + 1], act,
-                                     name=f"sage{k}"))
+                                     name=f"sage{k}", aggregate=agg))
+        elif cfg.model == "sage_max":
+            layers.append(sage_layer(dims[k], dims[k + 1], act,
+                                     name=f"sage_max{k}", aggregate="max"))
         elif cfg.model == "gat":
             layers.append(gat_layer(dims[k], dims[k + 1], cfg.num_heads,
                                     act, name=f"gat{k}"))
@@ -193,4 +202,5 @@ def make_gnn(cfg, feature_dim: Optional[int] = None):
                                       act, name=f"gat_e{k}"))
         else:
             raise ValueError(f"unknown GNN model {cfg.model!r}")
-    return MPGNNModel(tuple(layers), cfg.num_classes)
+    return MPGNNModel(tuple(layers), cfg.num_classes,
+                      aggregate_backend=cfg.aggregate_backend)

@@ -1,0 +1,23 @@
+"""Version compatibility shims for the jax API surface we use.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+and renamed its replication-check kwarg ``check_rep`` -> ``check_vma``
+along the way; this wrapper presents one signature for both.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:                      # jax < 0.6: experimental home
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """Uniform shard_map: per-device ``f`` over ``mesh`` with the
+    replication/VMA check toggled by ``check`` on any jax version."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check})

@@ -1,7 +1,10 @@
-"""Distributed graph representation invariants (paper §4.1)."""
+"""Distributed graph representation invariants (paper §4.1).
+
+The hypothesis property sweep lives in test_partition_properties.py
+(guarded by ``pytest.importorskip`` — hypothesis is a dev-only extra).
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.partition import build_partitions, partition_stats
 from repro.graph import sbm_graph, powerlaw_graph
@@ -10,60 +13,6 @@ from repro.graph import sbm_graph, powerlaw_graph
 def _graph(seed, n=120):
     return sbm_graph(num_nodes=n, num_classes=3, feature_dim=8,
                      p_in=0.06, p_out=0.02, seed=seed)
-
-
-@settings(max_examples=12, deadline=None)
-@given(st.integers(0, 10_000), st.sampled_from([2, 3, 4, 8]),
-       st.sampled_from(["1d_src", "1d_dst", "vertex_cut"]))
-def test_partition_invariants(seed, P, method):
-    g = _graph(seed)
-    sg = build_partitions(g, P, method=method)
-    plan = sg.plan
-
-    # every node is master in exactly one partition
-    owners = np.zeros(g.num_nodes, np.int32)
-    for p in range(P):
-        valid = plan.master_mask[p] > 0
-        owners[plan.masters[p][valid]] += 1
-    assert np.all(owners == 1)
-
-    # every edge appears exactly once across partitions
-    total_edges = int(plan.edge_mask.sum())
-    assert total_edges == g.num_edges
-    seen = np.zeros(g.num_edges, np.int32)
-    for p in range(P):
-        valid = plan.edge_mask[p] > 0
-        seen[plan.edge_orig[p][valid]] += 1
-    assert np.all(seen == 1)
-
-    # local endpoints reference the correct global node
-    n_m_pad = plan.n_m_pad
-    for p in range(P):
-        valid = plan.edge_mask[p] > 0
-        eids = plan.edge_orig[p][valid]
-        for loc, glob in ((plan.src_local[p][valid], g.src[eids]),
-                          (plan.dst_local[p][valid], g.dst[eids])):
-            is_master = loc < n_m_pad
-            got = np.where(is_master, plan.masters[p][np.minimum(
-                loc, n_m_pad - 1)], plan.mirrors[p][np.minimum(
-                    np.maximum(loc - n_m_pad, 0),
-                    plan.n_mir_pad - 1)])
-            assert np.array_equal(got, glob)
-
-    # exchange plan: send/recv pairs reference matching global ids
-    for p in range(P):
-        for q in range(P):
-            k = int(plan.send_mask[p, q].sum())
-            assert k == int(plan.recv_mask[q, p].sum())
-            sm = plan.masters[p][plan.send_idx[p, q, :k]]
-            rm = plan.mirrors[q][plan.recv_slot[q, p, :k]]
-            assert np.array_equal(sm, rm)
-
-    # 1d_src: the source of every local edge is a local master
-    if method == "1d_src":
-        for p in range(P):
-            valid = plan.edge_mask[p] > 0
-            assert np.all(plan.src_local[p][valid] < n_m_pad)
 
 
 def test_replica_factor_ordering():

@@ -1,0 +1,25 @@
+"""Property-based strategy invariants — needs hypothesis (dev extra)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import label_propagation_clusters
+from repro.graph import sbm_graph
+
+
+def _g(seed=0, n=300):
+    return sbm_graph(num_nodes=n, num_classes=4, feature_dim=8, p_in=0.05,
+                     p_out=0.005, seed=seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_cluster_split_bounds_size(seed):
+    g = _g(seed % 17)
+    cl = label_propagation_clusters(g, max_cluster_size=40, iters=3,
+                                    seed=seed)
+    sizes = np.bincount(cl)
+    assert sizes.max() <= 40
+    assert sizes.sum() == g.num_nodes

@@ -1,14 +1,16 @@
-"""NN-TGAR invariants + the paper's App. A.1 spectral equivalence."""
+"""NN-TGAR invariants + the paper's App. A.1 spectral equivalence.
+
+The hypothesis property sweeps live in test_tgar_properties.py (guarded
+by ``pytest.importorskip`` — hypothesis is a dev-only extra).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.config import GNNConfig
 from repro.core.mpgnn import forward_block, loss_block
 from repro.core.strategies import global_batch_view, mini_batch_views
-from repro.core.tgar import segment_softmax, segment_sum
 from repro.graph import make_dataset, build_block, sbm_graph
 from repro.graph.csr import Graph
 from repro.models import make_gnn
@@ -42,41 +44,6 @@ def test_gcn_equals_sparse_matmul():
     b = np.asarray(params["layers"][0]["b"])
     ref = L @ (g.node_features @ W) + b
     np.testing.assert_allclose(np.asarray(h), ref, rtol=2e-4, atol=2e-4)
-
-
-# ---------------------------------------------------------------------------
-# Sum-stage properties
-# ---------------------------------------------------------------------------
-
-
-@settings(max_examples=25, deadline=None)
-@given(st.integers(3, 60), st.integers(1, 200), st.integers(0, 2 ** 31 - 1))
-def test_segment_sum_permutation_invariant(n_seg, n_edges, seed):
-    r = np.random.default_rng(seed)
-    ids = r.integers(0, n_seg, n_edges)
-    data = r.normal(size=(n_edges, 5)).astype(np.float32)
-    out = segment_sum(jnp.asarray(data), jnp.asarray(ids), n_seg)
-    perm = r.permutation(n_edges)
-    out_p = segment_sum(jnp.asarray(data[perm]), jnp.asarray(ids[perm]),
-                        n_seg)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(out_p),
-                               rtol=1e-4, atol=1e-5)
-
-
-@settings(max_examples=25, deadline=None)
-@given(st.integers(2, 30), st.integers(1, 120), st.integers(0, 2 ** 31 - 1))
-def test_segment_softmax_normalized(n_seg, n_edges, seed):
-    r = np.random.default_rng(seed)
-    ids = r.integers(0, n_seg, n_edges)
-    logits = r.normal(size=(n_edges, 2)).astype(np.float32) * 5
-    values = np.ones((n_edges, 2, 1), np.float32)
-    mask = np.ones(n_edges, np.float32)
-    out = segment_softmax(jnp.asarray(logits), jnp.asarray(values),
-                          jnp.asarray(ids), n_seg, jnp.asarray(mask))
-    # softmax weights sum to 1 => aggregating ones gives 1 per non-empty seg
-    nonempty = np.bincount(ids, minlength=n_seg) > 0
-    got = np.asarray(out)[nonempty, :, 0]
-    np.testing.assert_allclose(got, 1.0, rtol=1e-4, atol=1e-4)
 
 
 def test_isolated_node_gets_zero_messages():
