@@ -23,8 +23,12 @@ The ``"csc"`` backend needs a precomputed :class:`~repro.kernels.ops.
 CSCPlan` (built once per graph/shard — the paper's reused CSC indexing);
 when no plan is threaded through it falls back to the reference primitives
 so exotic callers (e.g. the explicit-autodiff reference schedule) keep
-working. Kernel forwards are paired with reference-math ``custom_vjp``
-backwards, so ``jax.grad`` flows through the fused kernels.
+working. The plan's index arrays ride into the kernels as scalar-prefetch
+operands and the per-edge gather happens on-chip — the kernel path
+consumes the raw ``(E, H, D)`` messages directly, with no pre-gathered
+``(nb, L_pad, D)`` intermediate (and multi-head softmax is one launch,
+heads on the kernel grid). Kernel forwards are paired with reference-math
+``custom_vjp`` backwards, so ``jax.grad`` flows through the fused kernels.
 """
 from __future__ import annotations
 
@@ -36,8 +40,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.ops import (CSCPlan, NEG, edge_softmax_op,
-                               segment_max_op, segment_sum_op)
+from repro.kernels.ops import (CSCPlan, edge_softmax_op, segment_max_op,
+                               segment_sum_op)
+from repro.kernels.segment_sum import NEG   # the one masking sentinel
 
 
 # ---------------------------------------------------------------------------

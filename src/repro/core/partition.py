@@ -74,7 +74,9 @@ class PartitionPlan:
         """One CSCPlan per partition over its local destination ids
         (segments = the shard's [masters ; mirrors] axis), all with
         identical padded shapes so the engine can stack them (P, nb, L)
-        and shard them over the worker group."""
+        and shard them over the worker group. The stacked index arrays
+        are exactly what the fused-gather kernels scalar-prefetch — the
+        shard's raw edge messages are never re-laid-out on device."""
         key = (block_n, block_e)
         if key not in self._csc_plans:
             from repro.kernels.ops import build_csc_plans_stacked

@@ -70,6 +70,12 @@ def mini_batch_views(g: Graph, K: int, batch_nodes: int = 0,
     rng = np.random.default_rng(seed)
     labeled = np.where(g.train_mask if g.train_mask is not None
                        else np.ones(g.num_nodes, bool))[0]
+    if len(labeled) == 0:
+        # without this guard the generator silently yields empty views
+        # (zero targets, zero loss) forever — fail loudly instead
+        raise ValueError(
+            "mini_batch_views: the graph has no labeled nodes "
+            "(train_mask selects nothing) to sample batch targets from")
     bsz = batch_nodes or max(1, len(labeled) // 100)
     i = 0
     while steps is None or i < steps:

@@ -50,7 +50,10 @@ def segment_mean(data, segment_ids, num_segments, weights=None):
     ones = jnp.ones(data.shape[:1], data.dtype) if weights is None else weights
     total = jax.ops.segment_sum(data, segment_ids, num_segments)
     count = jax.ops.segment_sum(ones, segment_ids, num_segments)
-    return total / jnp.maximum(count, 1e-9)[..., None]
+    # broadcast the (N,) count over ALL trailing axes — (E, H, D) multi-head
+    # messages need (N, 1, 1), not the (N, 1) that [..., None] produced
+    count = count.reshape(count.shape + (1,) * (total.ndim - 1))
+    return total / jnp.maximum(count, 1e-9)
 
 
 def segment_max(data, segment_ids, num_segments):

@@ -10,10 +10,17 @@ scratch, each chunk rescales by exp(m_prev − m_new).
 
 Same CSC-blocked layout as segment_sum.py: destinations tiled into BN-row
 blocks, each owning a contiguous padded edge slice (built once per graph by
-ops.build_csc_plan — the paper's reused CSC indexing). Reached from the
-forward paths through the ``"csc"`` backend of :mod:`repro.core.aggregate`
-(GAT/GAT-E ``softmax`` combine on a single shard); multi-head (E, H, D)
-messages run one launch per head via ``ops.edge_softmax_op``.
+ops.build_csc_plan — the paper's reused CSC indexing). Like the sum/max
+kernels, the per-edge gather is **fused**: raw ``(E, H)`` logits and
+``(E, H, D)`` values are the operands and the plan's ``gather_idx`` arrives
+as a scalar-prefetch argument — no pre-gathered ``(nb, L_pad, ·)`` tensors.
+The head axis is the OUTERMOST grid dimension (``(H, nb, n_chunks)``, so
+each per-head value block is fetched once), making multi-head attention
+**one** kernel launch: each (head, block) pair streams its edge chunks
+with the chunk axis innermost, accumulating into its own (BN, D) output
+tile. Reached from the forward paths through the ``"csc"``
+backend of :mod:`repro.core.aggregate` (GAT/GAT-E ``softmax`` combine on a
+single shard).
 """
 from __future__ import annotations
 
@@ -27,10 +34,12 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.segment_sum import NEG
 
 
-def _edge_softmax_kernel(ids_ref, logit_ref, val_ref, out_ref,
-                         m_ref, l_ref, acc_ref, *, block_n: int):
-    chunk = pl.program_id(1)
-    nc = pl.num_programs(1)
+def _edge_softmax_kernel(idx_ref, ids_ref, logit_ref, val_ref, out_ref,
+                         m_ref, l_ref, acc_ref, *, block_n: int,
+                         block_e: int):
+    b = pl.program_id(1)
+    chunk = pl.program_id(2)
+    nc = pl.num_programs(2)
 
     @pl.when(chunk == 0)
     def _init():
@@ -39,9 +48,12 @@ def _edge_softmax_kernel(ids_ref, logit_ref, val_ref, out_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     ids = ids_ref[0]                                   # (BE,) in [0, BN]
-    logit = logit_ref[0]                               # (BE,)
-    vals = val_ref[0]                                  # (BE, D)
+    idx = idx_ref[b, pl.ds(chunk * block_e, block_e)]  # (BE,)
+    # fused gather of this chunk's logits/values for the current head
+    logit = jnp.take(logit_ref[:, 0], idx, axis=0, mode="clip")  # (BE,)
+    vals = jnp.take(val_ref[:, 0, :], idx, axis=0, mode="clip")  # (BE, D)
     valid = ids < block_n
+    logit = jnp.where(valid, logit, NEG)               # null pad lanes
     onehot = (ids[:, None] == jax.lax.broadcasted_iota(
         jnp.int32, (ids.shape[0], block_n), 1))        # (BE, BN) bool
 
@@ -66,33 +78,50 @@ def _edge_softmax_kernel(ids_ref, logit_ref, val_ref, out_ref,
     @pl.when(chunk == nc - 1)
     def _finish():
         out_ref[...] = (acc_ref[...]
-                        / jnp.maximum(l_ref[...], 1e-20)).astype(
+                        / jnp.maximum(l_ref[...], 1e-20))[:, None, :].astype(
                             out_ref.dtype)
 
 
-def edge_softmax_csc(gathered_logits, gathered_vals, local_ids,
+def edge_softmax_csc(logits, values, gather_idx, local_ids,
                      num_blocks: int, block_n: int, block_e: int = 256,
                      interpret: bool = False):
-    """gathered_logits (nb, L_pad), gathered_vals (nb, L_pad, D),
-    local_ids (nb, L_pad) -> (nb*block_n, D)."""
-    nb, l_pad = gathered_logits.shape
-    d = gathered_vals.shape[-1]
-    assert l_pad % block_e == 0
-    return pl.pallas_call(
-        functools.partial(_edge_softmax_kernel, block_n=block_n),
-        grid=(num_blocks, l_pad // block_e),
+    """Fused-gather multi-head edge softmax.
+
+    logits (E, H), values (E, H, D), gather_idx/local_ids (nb, L_pad)
+    -> (nb*block_n, H, D); one launch, heads on the grid.
+    """
+    e, h = logits.shape
+    d = values.shape[-1]
+    nb, l_pad = gather_idx.shape
+    assert nb == num_blocks and l_pad % block_e == 0
+    assert values.shape == (e, h, d), (values.shape, logits.shape)
+    if e == 0:
+        return jnp.zeros((num_blocks * block_n, h, d), values.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        # head axis OUTERMOST so the per-head (E, 1, D) value block is
+        # fetched once per head (its index map ignores b/c); chunk axis
+        # innermost: each (head, block) tile accumulates its
+        # online-softmax state across its edge chunks before moving on
+        grid=(h, num_blocks, l_pad // block_e),
         in_specs=[
-            pl.BlockSpec((1, block_e), lambda b, c: (b, c)),
-            pl.BlockSpec((1, block_e), lambda b, c: (b, c)),
-            pl.BlockSpec((1, block_e, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, block_e), lambda hd, b, c, idx: (b, c)),
+            pl.BlockSpec((e, 1), lambda hd, b, c, idx: (0, hd)),
+            pl.BlockSpec((e, 1, d), lambda hd, b, c, idx: (0, hd, 0)),
         ],
-        out_specs=pl.BlockSpec((block_n, d), lambda b, c: (b, 0)),
-        out_shape=jax.ShapeDtypeStruct((num_blocks * block_n, d),
-                                       gathered_vals.dtype),
+        out_specs=pl.BlockSpec((block_n, 1, d),
+                               lambda hd, b, c, idx: (b, hd, 0)),
         scratch_shapes=[
             pltpu.VMEM((block_n, 1), jnp.float32),
             pltpu.VMEM((block_n, 1), jnp.float32),
             pltpu.VMEM((block_n, d), jnp.float32),
         ],
+    )
+    return pl.pallas_call(
+        functools.partial(_edge_softmax_kernel, block_n=block_n,
+                          block_e=block_e),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_blocks * block_n, h, d),
+                                       values.dtype),
         interpret=interpret,
-    )(local_ids, gathered_logits, gathered_vals)
+    )(gather_idx, local_ids, logits, values)

@@ -18,7 +18,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG = -1e30
+from repro.kernels.segment_sum import NEG   # the one masking sentinel
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -38,9 +38,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     k_start = ki * block_k
 
     # ---- band check: does this (q, k) block intersect the mask band? -------
-    run = True
+    # (seq_len is the TRUE unpadded length: key blocks entirely past it
+    # hold only padding and are skipped)
+    run = k_start < seq_len
     if causal:
-        run = k_start <= q_start + block_q - 1
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
     if sliding_window:
         # newest key needed for oldest query: q_start - window + 1
         run_w = k_start + block_k - 1 >= q_start - sliding_window + 1
@@ -86,14 +88,20 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 def flash_attention(q, k, v, *, causal: bool = True, sliding_window: int = 0,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = False):
+                    seq_len: int = 0, interpret: bool = False):
     """q,k,v: (B, T, H, D) (same H — apply GQA repeat outside).
 
-    Returns (B, T, H, Dv). T must divide by the block sizes.
+    Returns (B, T, H, Dv). T must divide by the block sizes. ``seq_len``
+    (0 = T) is the TRUE unpadded sequence length: when the caller padded T
+    up to a block multiple, passing the original length here masks the
+    padded keys out of the softmax (they carry zero logits, not -inf, and
+    would otherwise inflate every non-causal denominator).
     """
     B, T, H, D = q.shape
     Dv = v.shape[-1]
     assert T % block_q == 0 and T % block_k == 0
+    seq_len = seq_len or T
+    assert seq_len <= T
     sm_scale = 1.0 / np.sqrt(D)
     grid = (B, H, T // block_q, T // block_k)
     spec_q = pl.BlockSpec((1, block_q, 1, D), lambda b, h, q_, k_: (b, q_, h, 0))
@@ -103,7 +111,7 @@ def flash_attention(q, k, v, *, causal: bool = True, sliding_window: int = 0,
     return pl.pallas_call(
         functools.partial(_flash_kernel, block_q=block_q, block_k=block_k,
                           sm_scale=sm_scale, causal=causal,
-                          sliding_window=sliding_window, seq_len=T),
+                          sliding_window=sliding_window, seq_len=seq_len),
         grid=grid,
         in_specs=[spec_q, spec_k, spec_v],
         out_specs=spec_o,

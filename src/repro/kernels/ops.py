@@ -13,8 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.segment_sum import (segment_sum_csc, segment_max_csc,
-                                       NEG)
+from repro.kernels.segment_sum import segment_sum_csc, segment_max_csc
 from repro.kernels.wkv6 import wkv6 as _wkv6_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 
@@ -34,7 +33,9 @@ class CSCPlan:
     is static aux data) so plans ride along GraphBlocks and engine shards
     through ``jit`` / ``shard_map`` / ``grad``.
     """
-    gather_idx: np.ndarray    # (nb, L_pad) int32 into edge axis (E = pad row)
+    gather_idx: np.ndarray    # (nb, L_pad) int32 into edge axis (E = pad
+    #                           lane; the fused kernels clip it and the
+    #                           local_ids masking nulls its contribution)
     local_ids: np.ndarray     # (nb, L_pad) int32 in [0, BN]; BN = padding
     num_blocks: int
     block_n: int
@@ -76,7 +77,7 @@ def build_csc_plan(segment_ids: np.ndarray, num_segments: int,
         assert l_pad >= l_min and l_pad % block_e == 0, (l_pad, l_min)
     else:
         l_pad = l_min
-    gather = np.full((nb, l_pad), E, np.int32)          # E = zero pad row
+    gather = np.full((nb, l_pad), E, np.int32)          # E = pad lane
     local = np.full((nb, l_pad), block_n, np.int32)     # BN = dead row
     for b in range(nb):
         sl = order[starts[b]:ends[b]]
@@ -98,7 +99,7 @@ def build_csc_plans_stacked(segment_ids_rows, num_segments: int,
         if not extra:
             return p
         gather = np.pad(p.gather_idx, ((0, 0), (0, extra)),
-                        constant_values=p.num_edges)     # zero pad row
+                        constant_values=p.num_edges)     # pad lane
         local = np.pad(p.local_ids, ((0, 0), (0, extra)),
                        constant_values=p.block_n)        # dead lane
         return CSCPlan(gather, local, p.num_blocks, p.block_n, p.block_e,
@@ -112,13 +113,10 @@ def build_csc_plans_stacked(segment_ids_rows, num_segments: int,
 def _segment_reduce_planned(data, gather_idx, local_ids, num_segments: int,
                             block_n: int, block_e: int, interpret: bool,
                             op: str = "sum"):
-    D = data.shape[1]
-    pad_val = 0.0 if op == "sum" else NEG     # identity of the combine
-    pad_row = jnp.full((1, D), pad_val, data.dtype)
-    padded = jnp.concatenate([data, pad_row], axis=0)
-    gathered = padded[gather_idx]                         # (nb, L_pad, D)
+    # the gather is fused into the kernels (scalar-prefetched plan indices)
+    # — no (nb, L_pad, D) pre-gathered tensor is materialized here anymore
     kern = segment_sum_csc if op == "sum" else segment_max_csc
-    out = kern(gathered, local_ids, gather_idx.shape[0],
+    out = kern(data, gather_idx, local_ids, gather_idx.shape[0],
                block_n, block_e, interpret=interpret)
     return out[:num_segments]
 
@@ -151,6 +149,48 @@ def segment_max_op(data: jax.Array, plan: CSCPlan,
         flat, jnp.asarray(plan.gather_idx), jnp.asarray(plan.local_ids),
         plan.num_segments, plan.block_n, plan.block_e, interpret, "max")
     return out.reshape((plan.num_segments,) + trailing)
+
+
+def jaxpr_avals(closed_jaxpr):
+    """Yield the output aval of every equation, recursing into sub-jaxprs
+    (pjit bodies, custom_vjp calls, scans ...).
+
+    Verification hook for the fused-gather contract: the bench and the
+    kernel tests walk the csc path's jaxpr and assert that no equation
+    materializes a ``(nb, L_pad, D)`` pre-gathered message tensor.
+    """
+    import jax.core as jcore
+    stack = [closed_jaxpr.jaxpr]
+    while stack:
+        jaxpr = stack.pop()
+        for eqn in jaxpr.eqns:
+            for var in eqn.outvars:
+                yield var.aval
+            for val in eqn.params.values():
+                for sub in (val if isinstance(val, (tuple, list))
+                            else (val,)):
+                    if isinstance(sub, jcore.ClosedJaxpr):
+                        stack.append(sub.jaxpr)
+                    elif isinstance(sub, jcore.Jaxpr):
+                        stack.append(sub)
+
+
+def assert_pregather_free(closed_jaxpr, plan: CSCPlan):
+    """Assert the traced computation never allocates a tensor shaped like
+    the pre-gathered (nb, L_pad, ...) message layout the fused kernels
+    eliminated — including the 2-D *float* (nb, L_pad) layout the old
+    edge-softmax path used for gathered logits. The integer 2-D plan
+    index arrays (gather_idx/local_ids) are expected and allowed."""
+    nb, l_pad = plan.gather_idx.shape
+    for aval in jaxpr_avals(closed_jaxpr):
+        shape = tuple(getattr(aval, "shape", ()))
+        if len(shape) < 2 or shape[:2] != (nb, l_pad):
+            continue
+        pregather = len(shape) >= 3 or jnp.issubdtype(
+            getattr(aval, "dtype", jnp.int32), jnp.floating)
+        assert not pregather, (
+            f"pre-gathered message tensor {shape} found in jaxpr "
+            f"(plan: nb={nb}, L_pad={l_pad})")
 
 
 # ---------------------------------------------------------------------------
@@ -191,13 +231,25 @@ def flash_attention_op(q, k, v, causal: bool = True, sliding_window: int = 0,
         v = jnp.repeat(v, rep, axis=2)
     bq = min(block_q, T)
     bk = min(block_k, T)
+    # after clamping, round the larger block down to a multiple of the
+    # smaller: then max(bq, bk) is a common multiple of both (the
+    # kernel's divisibility contract) and padding stays under one block
+    # (an lcm of coprime-ish clamped blocks could inflate T several-fold)
+    if bq >= bk:
+        bq = max(bk, bq // bk * bk)
+    else:
+        bk = max(bq, bk // bq * bq)
     pad = (-T) % max(bq, bk)
     if pad:
         zp = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
         q, k, v = zp(q), zp(k), zp(v)
+    # seq_len=T (the *unpadded* length) so the kernel masks the padded
+    # keys — without it, non-causal attention leaks zero-logit pad keys
+    # into the softmax denominator
     out = _flash_kernel(q, k, v, causal=causal,
                         sliding_window=sliding_window,
-                        block_q=bq, block_k=bk, interpret=interpret)
+                        block_q=bq, block_k=bk, seq_len=T,
+                        interpret=interpret)
     return out[:, :T]
 
 
@@ -212,13 +264,11 @@ def _edge_softmax_planned(logits, values, gather_idx, local_ids,
                           num_segments: int, block_n: int, block_e: int,
                           interpret: bool):
     from repro.kernels.edge_softmax import edge_softmax_csc
-    D = values.shape[1]
-    pl_ = jnp.concatenate([logits, jnp.full((1,), -1e30, logits.dtype)])
-    pv = jnp.concatenate([values, jnp.zeros((1, D), values.dtype)], axis=0)
-    gl = pl_[gather_idx]
-    gv = pv[gather_idx]
-    out = edge_softmax_csc(gl, gv, local_ids, gather_idx.shape[0],
-                           block_n, block_e, interpret=interpret)
+    # raw (E, H) / (E, H, D) operands go straight to the fused-gather
+    # kernel; heads run on the kernel grid in a single launch
+    out = edge_softmax_csc(logits, values, gather_idx, local_ids,
+                           gather_idx.shape[0], block_n, block_e,
+                           interpret=interpret)
     return out[:num_segments]
 
 
@@ -228,20 +278,20 @@ def edge_softmax_op(logits: jax.Array, values: jax.Array, plan: CSCPlan,
 
     Single-head: logits (E,), values (E, D) -> (num_segments, D).
     Multi-head:  logits (E, H), values (E, H, D) -> (num_segments, H, D);
-    heads share the CSC plan and run as independent kernel launches (the
-    gather layout depends only on the destination ids, not the head).
+    heads share the CSC plan (the gather layout depends only on the
+    destination ids, not the head) and run as one kernel launch with the
+    head axis on the grid.
     """
     assert logits.shape[0] == plan.num_edges
     g_idx = jnp.asarray(plan.gather_idx)
     l_ids = jnp.asarray(plan.local_ids)
     if logits.ndim == 1:
-        return _edge_softmax_planned(
-            logits, values, g_idx, l_ids, plan.num_segments, plan.block_n,
-            plan.block_e, interpret)
+        out = _edge_softmax_planned(
+            logits[:, None], values[:, None, :], g_idx, l_ids,
+            plan.num_segments, plan.block_n, plan.block_e, interpret)
+        return out[:, 0, :]
     assert logits.ndim == 2 and values.ndim == 3, (logits.shape,
                                                    values.shape)
-    heads = [_edge_softmax_planned(
-        logits[:, h], values[:, h, :], g_idx, l_ids, plan.num_segments,
-        plan.block_n, plan.block_e, interpret)
-        for h in range(logits.shape[1])]
-    return jnp.stack(heads, axis=1)
+    return _edge_softmax_planned(
+        logits, values, g_idx, l_ids, plan.num_segments, plan.block_n,
+        plan.block_e, interpret)

@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.segment_sum import NEG   # the one masking sentinel
+
 
 # ---------------------------------------------------------------------------
 # segment_sum
@@ -71,7 +73,7 @@ def mha_ref(q, k, v, causal=True, sliding_window=0):
         ok &= ki <= qi
     if sliding_window:
         ok &= ki > qi - sliding_window
-    s = jnp.where(ok[None, None], s, -1e30)
+    s = jnp.where(ok[None, None], s, NEG)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)
                       ).astype(q.dtype)
@@ -85,7 +87,7 @@ def mha_ref(q, k, v, causal=True, sliding_window=0):
 def edge_softmax_ref(logits, values, segment_ids, num_segments):
     """logits (E,), values (E, D) -> (num_segments, D)."""
     seg_max = jax.ops.segment_max(logits, segment_ids, num_segments)
-    seg_max = jnp.maximum(seg_max, -1e30)
+    seg_max = jnp.maximum(seg_max, NEG)
     ex = jnp.exp(logits - seg_max[segment_ids])
     den = jax.ops.segment_sum(ex, segment_ids, num_segments)
     num = jax.ops.segment_sum(ex[:, None] * values, segment_ids,

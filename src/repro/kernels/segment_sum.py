@@ -15,8 +15,49 @@ slice of a destination block is processed in ``BE``-sized chunks by a
 sequential grid axis revisiting the same output tile (accumulation in
 VMEM).
 
+Fused gather
+------------
+The per-edge gather happens **inside** the kernel: the raw ``(E, D)`` edge
+messages are the kernel operand and the plan's ``gather_idx`` rides in as a
+``PrefetchScalarGridSpec`` scalar-prefetch argument. Each grid step reads
+its ``BE`` indices and gathers the matching message rows on-chip — there is
+no ``(nb, L_pad, D)`` pre-gathered tensor in HBM anymore (that tensor
+duplicated every message byte and dominated Sum-stage memory traffic; see
+``benchmarks/kernels_bench.py aggregate`` for the bytes-moved comparison).
+Padding lanes (``local_id == BN``) contribute nothing — the one-hot matmul
+and the masked max both null them — so no sentinel pad row is appended to
+the messages either; their (clipped) gather target is irrelevant.
+
+Block geometry & VMEM budget
+----------------------------
+Per grid step the kernel holds, in f32:
+
+=====================  =======================  =========================
+buffer                 shape                    bytes (defaults)
+=====================  =======================  =========================
+messages (resident)    (E, D)                   4·E·D   (fetched once; the
+                                                constant index map keeps
+                                                the block in VMEM across
+                                                grid steps)
+gather indices (SMEM)  (nb, L_pad) int32        4·nb·L_pad
+local ids              (1, BE)                  4·BE
+one-hot (sum)          (BE, BN)                 4·BE·BN      (256·128 → 128 KiB)
+candidates (max)       (BE, BN, BD)             4·BE·BN·BD   (256·128·64 → 8 MiB)
+output tile            (BN, D) / (BN, BD)       4·BN·D
+=====================  =======================  =========================
+
+The max kernel's candidate expansion is the binding constraint: with the
+default ``block_e=256, block_n=128`` the feature tile ``BD`` is capped at
+**64** to stay within half of a ~16 MiB VMEM core; wider features are
+handled by the D-tiling grid axis (``_pick_block_d`` chooses the largest
+divisor of D within the cap), so D is no longer limited by VMEM. The
+message residency 4·E·D is the other budget line — for edge counts beyond
+VMEM on real hardware the messages move to ``pltpu.ANY``/HBM with
+per-chunk DMA (same kernel structure); interpret mode (this container)
+validates the arithmetic either way.
+
 Host-side planning (``build_csc_plan`` in ops.py) computes the padded
-edge gather indices once per graph — the paper's "reused CSR/CSC indexing"
+edge-slice layout once per graph — the paper's "reused CSR/CSC indexing"
 (§4.2): views/batches reuse the plan, only messages change.
 
 These kernels are wired into the forward paths through the Sum-stage
@@ -24,9 +65,13 @@ backend registry in :mod:`repro.core.aggregate`: selecting the ``"csc"``
 :class:`~repro.core.aggregate.AggregationBackend` routes the combine of
 both ``layer_forward_block`` and the distributed engine through
 ``segment_sum_csc`` / ``segment_max_csc`` / ``edge_softmax_csc`` (the
-``"reference"`` backend keeps the portable jnp segment ops). A ``max``
-combine (kernel below) covers max-pooling aggregators; multi-head
-``(E, H, D)`` messages are handled by the wrappers in ops.py.
+``"reference"`` backend keeps the portable jnp segment ops). Multi-head
+``(E, H, D)`` messages fold into the lane axis for sum/max (ops.py
+wrappers); the edge-softmax kernel carries the head axis in its grid.
+
+``NEG`` below is *the* masking sentinel of the repo — kernels, reference
+oracles, and attention masks all import it from here so empty-segment
+thresholds (``> NEG / 2`` in aggregate.py) can never drift out of sync.
 """
 from __future__ import annotations
 
@@ -35,17 +80,38 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG = -1e30
 
 
-def _segment_sum_kernel(ids_ref, data_ref, out_ref, *, block_n: int):
-    """One (node_block, edge_chunk) grid step.
+def _pick_block_d(d: int, cap: int = 64) -> int:
+    """Largest divisor of ``d`` within the VMEM cap (see module docstring).
 
-    ids_ref:  (1, BE) int32 — local destination row in [0, BN]; BN = pad.
-    data_ref: (1, BE, D) f32 — gathered edge messages for this chunk.
-    out_ref:  (BN, D) f32 — destination tile (revisited across chunks).
+    Falls back to 1 only for pathological prime widths; the common power-
+    of-two feature dims tile exactly.
     """
+    if d <= cap:
+        return d
+    for bd in range(cap, 0, -1):
+        if d % bd == 0:
+            return bd
+    return 1
+
+
+def _segment_sum_kernel(idx_ref, ids_ref, msg_ref, out_ref, *,
+                        block_n: int, block_e: int):
+    """One (node_block, edge_chunk) grid step, gather fused in.
+
+    idx_ref: (nb, L_pad) int32 scalar-prefetch — rows of ``msg`` feeding
+             each lane (pad lanes point past E; clipped, then nulled by
+             the one-hot).
+    ids_ref: (1, BE) int32 — local destination row in [0, BN]; BN = pad.
+    msg_ref: (E, D) f32 — raw edge messages (constant block, VMEM
+             resident across the whole grid).
+    out_ref: (BN, D) f32 — destination tile (revisited across chunks).
+    """
+    b = pl.program_id(0)
     chunk = pl.program_id(1)
 
     @pl.when(chunk == 0)
@@ -53,8 +119,9 @@ def _segment_sum_kernel(ids_ref, data_ref, out_ref, *, block_n: int):
         out_ref[...] = jnp.zeros_like(out_ref)
 
     ids = ids_ref[0]                                    # (BE,)
-    data = data_ref[0]                                  # (BE, D)
-    # one-hot on the MXU: (BE, BN) — padding rows (id == BN) hit no row
+    idx = idx_ref[b, pl.ds(chunk * block_e, block_e)]   # (BE,)
+    data = jnp.take(msg_ref[...], idx, axis=0, mode="clip")  # fused gather
+    # one-hot on the MXU: (BE, BN) — padding lanes (id == BN) hit no row
     onehot = (ids[:, None] == jax.lax.broadcasted_iota(
         jnp.int32, (ids.shape[0], block_n), 1)).astype(data.dtype)
     out_ref[...] += jax.lax.dot_general(
@@ -62,79 +129,106 @@ def _segment_sum_kernel(ids_ref, data_ref, out_ref, *, block_n: int):
         preferred_element_type=out_ref.dtype)
 
 
-def segment_sum_csc(gathered: jax.Array, local_ids: jax.Array,
-                    num_blocks: int, block_n: int,
+def segment_sum_csc(data: jax.Array, gather_idx: jax.Array,
+                    local_ids: jax.Array, num_blocks: int, block_n: int,
                     block_e: int = 256, interpret: bool = False):
-    """Blocked segment-sum.
+    """Blocked segment-sum with the per-edge gather fused into the kernel.
 
-    gathered:  (num_blocks, L_pad, D) — edge messages pre-gathered into the
-               per-destination-block padded layout (L_pad % block_e == 0).
-    local_ids: (num_blocks, L_pad) int32 — destination row within block,
-               block_n for padding lanes.
-    returns    (num_blocks * block_n, D).
+    data:       (E, D) raw edge messages (no pre-gathered layout).
+    gather_idx: (num_blocks, L_pad) int32 plan indices into the edge axis
+                (pad lanes hold E; L_pad % block_e == 0).
+    local_ids:  (num_blocks, L_pad) int32 — destination row within block,
+                block_n for padding lanes.
+    returns     (num_blocks * block_n, D).
     """
-    nb, l_pad, d = gathered.shape
+    e, d = data.shape
+    nb, l_pad = gather_idx.shape
     assert nb == num_blocks and l_pad % block_e == 0
-    n_chunks = l_pad // block_e
-    out = pl.pallas_call(
-        functools.partial(_segment_sum_kernel, block_n=block_n),
-        grid=(num_blocks, n_chunks),
+    if e == 0:
+        return jnp.zeros((num_blocks * block_n, d), data.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_blocks, l_pad // block_e),
         in_specs=[
-            pl.BlockSpec((1, block_e), lambda b, c: (b, c)),
-            pl.BlockSpec((1, block_e, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, block_e), lambda b, c, idx: (b, c)),
+            pl.BlockSpec((e, d), lambda b, c, idx: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((block_n, d), lambda b, c: (b, 0)),
+        out_specs=pl.BlockSpec((block_n, d), lambda b, c, idx: (b, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_segment_sum_kernel, block_n=block_n,
+                          block_e=block_e),
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((num_blocks * block_n, d),
-                                       gathered.dtype),
+                                       data.dtype),
         interpret=interpret,
-    )(local_ids, gathered)
-    return out
+    )(gather_idx, local_ids, data)
 
 
-def _segment_max_kernel(ids_ref, data_ref, out_ref, *, block_n: int):
-    """Masked per-destination max over one (node_block, edge_chunk) step.
+def _segment_max_kernel(idx_ref, ids_ref, msg_ref, out_ref, *,
+                        block_n: int, block_e: int):
+    """Masked per-destination max over one (node_block, d_tile, edge_chunk)
+    step, gather fused in.
 
     No one-hot matmul here — max has no MXU form — so the chunk expands to
-    a (BE, BN, D) masked candidate tensor on the VPU. Padding lanes
+    a (BE, BN, BD) masked candidate tensor on the VPU; the d_tile grid axis
+    keeps BD within the VMEM cap (module docstring). Padding lanes
     (id == BN) match no destination row and empty rows stay at NEG.
     """
-    chunk = pl.program_id(1)
+    b = pl.program_id(1)
+    chunk = pl.program_id(2)
 
     @pl.when(chunk == 0)
     def _init():
         out_ref[...] = jnp.full_like(out_ref, NEG)
 
     ids = ids_ref[0]                                    # (BE,)
-    data = data_ref[0]                                  # (BE, D)
+    idx = idx_ref[b, pl.ds(chunk * block_e, block_e)]   # (BE,)
+    data = jnp.take(msg_ref[...], idx, axis=0, mode="clip")  # (BE, BD)
     onehot = ids[:, None] == jax.lax.broadcasted_iota(
         jnp.int32, (ids.shape[0], block_n), 1)          # (BE, BN) bool
     cand = jnp.where(onehot[:, :, None], data[:, None, :],
-                     jnp.asarray(NEG, data.dtype))      # (BE, BN, D)
+                     jnp.asarray(NEG, data.dtype))      # (BE, BN, BD)
     out_ref[...] = jnp.maximum(out_ref[...], jnp.max(cand, axis=0))
 
 
-def segment_max_csc(gathered: jax.Array, local_ids: jax.Array,
-                    num_blocks: int, block_n: int,
-                    block_e: int = 256, interpret: bool = False):
-    """Blocked segment-max; same layout contract as :func:`segment_sum_csc`.
+def segment_max_csc(data: jax.Array, gather_idx: jax.Array,
+                    local_ids: jax.Array, num_blocks: int, block_n: int,
+                    block_e: int = 256, block_d: int = 0,
+                    interpret: bool = False):
+    """Blocked segment-max; same fused-gather contract as
+    :func:`segment_sum_csc`, plus a feature-tiling grid axis.
 
-    Empty destination rows come back as ``NEG`` (callers clamp). Note the
-    (BE, BN, D) candidate tensor: for TPU VMEM keep block_e * block_n * D
-    modest (e.g. 256·128 rows at D<=64) or shrink ``block_e``.
+    ``block_d`` (0 = auto) tiles the feature axis so the (BE, BN, BD)
+    candidate tensor fits VMEM at any D — the auto pick is the largest
+    divisor of D within the documented cap. Empty destination rows come
+    back as ``NEG`` (callers clamp).
     """
-    nb, l_pad, d = gathered.shape
+    e, d = data.shape
+    nb, l_pad = gather_idx.shape
     assert nb == num_blocks and l_pad % block_e == 0
-    n_chunks = l_pad // block_e
-    out = pl.pallas_call(
-        functools.partial(_segment_max_kernel, block_n=block_n),
-        grid=(num_blocks, n_chunks),
+    if e == 0:
+        return jnp.full((num_blocks * block_n, d), NEG, data.dtype)
+    bd = block_d or _pick_block_d(d)
+    assert d % bd == 0, (d, bd)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        # d-tiles OUTERMOST so the (E, BD) message block is fetched once
+        # per tile (its index map ignores b/c); chunks innermost so each
+        # (dt, b) output tile accumulates in VMEM
+        grid=(d // bd, num_blocks, l_pad // block_e),
         in_specs=[
-            pl.BlockSpec((1, block_e), lambda b, c: (b, c)),
-            pl.BlockSpec((1, block_e, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, block_e), lambda dt, b, c, idx: (b, c)),
+            pl.BlockSpec((e, bd), lambda dt, b, c, idx: (0, dt)),
         ],
-        out_specs=pl.BlockSpec((block_n, d), lambda b, c: (b, 0)),
+        out_specs=pl.BlockSpec((block_n, bd),
+                               lambda dt, b, c, idx: (b, dt)),
+    )
+    return pl.pallas_call(
+        functools.partial(_segment_max_kernel, block_n=block_n,
+                          block_e=block_e),
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((num_blocks * block_n, d),
-                                       gathered.dtype),
+                                       data.dtype),
         interpret=interpret,
-    )(local_ids, gathered)
-    return out
+    )(gather_idx, local_ids, data)

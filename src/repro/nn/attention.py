@@ -11,9 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.segment_sum import NEG as NEG_INF  # one masking sentinel
 from repro.nn.layers import _fan_in_init, rmsnorm_init, rmsnorm_apply
-
-NEG_INF = -1e30
 
 # ---------------------------------------------------------------------------
 # RoPE

@@ -26,3 +26,22 @@ def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600):
             f"subprocess failed:\nSTDOUT:\n{proc.stdout[-4000:]}\n"
             f"STDERR:\n{proc.stderr[-4000:]}")
     return proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# CI-lane tiering (shared by the arch test suites): heavyweight archs run
+# their expensive sweeps under ``-m slow`` so the default lane stays under
+# ~5 minutes. The light archs left in the fast lane (qwen3-4b GQA dense,
+# minicpm3 MLA, qwen2-vl M-RoPE) still cover the distinct cache semantics.
+# ---------------------------------------------------------------------------
+
+HEAVY_ARCHS = {"dbrx-132b", "whisper-base", "rwkv6-1.6b",
+               "phi3-medium-14b", "jamba-1.5-large-398b", "qwen3-32b",
+               "mixtral-8x7b"}
+
+
+def arch_params():
+    """ASSIGNED_ARCHS with the heavyweight ones marked slow."""
+    from repro.config import ASSIGNED_ARCHS
+    return [pytest.param(a, marks=pytest.mark.slow)
+            if a in HEAVY_ARCHS else a for a in ASSIGNED_ARCHS]

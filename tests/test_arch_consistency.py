@@ -5,10 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import run_with_devices
+from conftest import arch_params, run_with_devices
 from repro.arch import build_model
-from repro.config import ASSIGNED_ARCHS, get_arch_config, MambaConfig, \
-    RWKVConfig
+from repro.config import get_arch_config, MambaConfig, RWKVConfig
+
+ARCH_PARAMS = arch_params()   # heavyweight archs marked slow (conftest)
 
 
 def _batch_for(cfg, rng, B, S, train=False):
@@ -32,7 +33,7 @@ def _batch_for(cfg, rng, B, S, train=False):
     return b
 
 
-@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_decode_matches_prefill(arch):
     """prefill(S/2) + S/2 decode steps == prefill(S): exact cache carry
     for attention, MLA, Mamba state, RWKV state."""
@@ -97,6 +98,7 @@ def test_chunk_size_invariance_rwkv():
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_rolling_window_decode_matches_full_cache():
     """O(window) rolling cache == full cache for a SWA model."""
     cfg = get_arch_config("mixtral-8x7b").reduced().replace(

@@ -11,6 +11,12 @@ import repro.arch.model as arch_model
 from repro.arch import build_model, layer_kinds
 from repro.config import ASSIGNED_ARCHS, INPUT_SHAPES, get_arch_config
 
+from conftest import arch_params
+
+# heavyweight archs run train/serve smoke under ``-m slow`` (conftest);
+# the cheap layer-kind / param-count checks below still sweep every arch
+ARCH_PARAMS = arch_params()
+
 
 def _batch(cfg, rng, B=2, S=32, train=True):
     batch = {}
@@ -33,7 +39,7 @@ def _batch(cfg, rng, B=2, S=32, train=True):
     return batch
 
 
-@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_reduced_smoke_train_step(arch):
     cfg = get_arch_config(arch).reduced().replace(dtype="float32")
     assert cfg.num_layers == 2 and cfg.d_model <= 512
@@ -56,7 +62,7 @@ def test_reduced_smoke_train_step(arch):
     assert np.isfinite(float(l2))
 
 
-@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_reduced_smoke_serve(arch):
     cfg = get_arch_config(arch).reduced().replace(dtype="float32")
     model = build_model(cfg, remat=False)

@@ -121,3 +121,31 @@ def test_deeper_exploration_monotone():
     hops3, _ = bfs_layers(g, targets, 3)
     for a, b in zip(hops3[:-1], hops3[1:]):
         assert np.all(np.isin(a, b))
+
+
+# ---------------------------------------------------------------------------
+# segment primitives
+# ---------------------------------------------------------------------------
+
+
+def test_segment_mean_multi_head_messages():
+    """Regression: (E, H, D) messages used to hit a broadcast shape error
+    (the (N, 1) count against (N, H, D) totals); the count must broadcast
+    over every trailing axis."""
+    from repro.core.tgar import segment_mean
+    rng = np.random.default_rng(0)
+    E, N, H, D = 60, 10, 3, 5
+    ids = jnp.asarray(rng.integers(0, N, E).astype(np.int32))
+    data = jnp.asarray(rng.normal(size=(E, H, D)), jnp.float32)
+    out = segment_mean(data, ids, N)
+    assert out.shape == (N, H, D)
+    total = jax.ops.segment_sum(data, ids, N)
+    count = jax.ops.segment_sum(jnp.ones(E, jnp.float32), ids, N)
+    ref = np.asarray(total) / np.maximum(np.asarray(count), 1e-9)[:, None,
+                                                                  None]
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-6, atol=1e-6)
+    # the 2-D contract is unchanged
+    d2 = data[:, 0, :]
+    out2 = segment_mean(d2, ids, N)
+    np.testing.assert_allclose(np.asarray(out2), ref[:, 0, :], rtol=1e-6,
+                               atol=1e-6)
