@@ -16,8 +16,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_call
-from repro.kernels.ops import (assert_pregather_free, build_csc_plan,
-                               flash_attention_op, segment_sum_op, wkv6_op)
+from repro.kernels.ops import (assert_pregather_free,
+                               assert_sum_stage_fused, build_csc_plan,
+                               count_segment_scatters, flash_attention_op,
+                               segment_sum_op, wkv6_op)
 from repro.kernels.ref import mha_ref, segment_sum_ref, wkv6_ref
 
 
@@ -93,26 +95,12 @@ def _sum_stage_traffic():
     plan = build_csc_plan(ids, N)
     nb, l_pad = plan.gather_idx.shape
 
-    import time as _time
-
-    def best_of(fn, arg, n=5):
-        """Min over n samples — interpret-mode emulation is bimodal (GC /
-        allocator pauses), so the mean buries real differences; the min
-        is the standard microbenchmark estimator for that regime."""
-        jax.block_until_ready(fn(arg))                      # warmup
-        samples = []
-        for _ in range(n):
-            t0 = _time.perf_counter()
-            jax.block_until_ready(fn(arg))
-            samples.append(_time.perf_counter() - t0)
-        return min(samples) * 1e6
-
     # jit the fused wrapper so both sides time compiled dispatch (the
     # pregather emulation below is @jax.jit)
     fused = jax.jit(functools.partial(segment_sum_op, plan=plan,
                                       interpret=True))
     assert_pregather_free(jax.make_jaxpr(fused)(data), plan)
-    us_fused = best_of(fused, data)
+    us_fused = _best_of(fused, data)
 
     ident = np.arange(nb * l_pad, dtype=np.int32).reshape(nb, l_pad)
 
@@ -126,7 +114,7 @@ def _sum_stage_traffic():
                                plan.block_n, plan.block_e,
                                interpret=True)[:N]
 
-    us_pre = best_of(pregather, data)
+    us_pre = _best_of(pregather, data)
     np.testing.assert_allclose(np.asarray(fused(data)),
                                np.asarray(pregather(data)),
                                rtol=1e-5, atol=1e-5)
@@ -146,37 +134,203 @@ def _sum_stage_traffic():
     }
 
 
-def aggregate(out_json: str = "BENCH_aggregate.json"):
-    """End-to-end TGAR layer forward under each aggregation backend.
+def _best_of(fn, *args, n=5):
+    """Min over n samples — interpret-mode emulation is bimodal (GC /
+    allocator pauses), so the mean buries real differences; the min is
+    the standard microbenchmark estimator for that regime."""
+    import time as _time
+    jax.block_until_ready(fn(*args))                      # warmup
+    samples = []
+    for _ in range(n):
+        t0 = _time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append(_time.perf_counter() - t0)
+    return min(samples) * 1e6
 
-    Times ``forward_block`` (NN-T -> NN-G -> Sum -> NN-A, jitted) for one
-    model per combine mode, "reference" vs "csc", and dumps the rows to
+
+def _backward_traffic():
+    """Fused backward kernels vs the reconstructed PR-2 reference-math
+    backward: wall-clock and message-bytes moved by one backward pass.
+
+    Both sides run the SAME fused forward kernels; they differ only in
+    the custom_vjp backward — the live path runs the plan-driven Pallas
+    kernels (kernels/backward.py), the reconstruction re-attaches the old
+    reference math (``g[segment_ids]`` jnp gathers; for softmax a full
+    ``jax.ops.segment_max``/``segment_sum`` recompute plus three edge
+    gathers), which is exactly what PR 2 shipped. Mirrors
+    ``_sum_stage_traffic``: wall-clock carries the interpret-mode
+    trajectory, the bytes columns carry the hardware-relevant ratio.
+
+    Byte accounting (f32, message/edge tensors through HBM per call):
+
+    - segment-sum bwd, fused: write d_data (E·D); the cotangent block
+      (N·D) is a resident read. Reference: row-gather reads g (E·D) and
+      writes d_data (E·D) — 2·E·D.
+    - softmax bwd, fused: read logits (E·H) + values (E·H·D), write
+      d_logits + d_values — 2·E·H·D + 2·E·H of edge traffic; p_e lives
+      only in VMEM. Reference recompute: the two segment passes re-read
+      the logits and materialize ex and p (4·E·H), the three edge
+      gathers (g_e, out_e twice each: write+read = 4·E·H·D) plus values
+      read and d_* writes — 7·E·H·D + 8·E·H in total.
+    """
+    from repro.core.aggregate import combine, reference_edge_softmax_bwd
+    from repro.kernels.ops import edge_softmax_op
+
+    rng = np.random.default_rng(2)
+    E, N, D = 20000, 4000, 64
+    H = 2
+    ids = rng.integers(0, N, E).astype(np.int32)
+    dst = jnp.asarray(ids)
+    plan = build_csc_plan(ids, N)
+    mask = jnp.ones(E, jnp.float32)
+    value = jnp.asarray(rng.normal(size=(E, H, D)), jnp.float32)
+    logit = jnp.asarray(rng.normal(size=(E, H)), jnp.float32)
+
+    def loss(mode, v, lg, backend, pln):
+        out = combine(mode, {"value": v, "logit": lg}, dst, N, mask,
+                      backend=backend, plan=pln)
+        return jnp.sum(jnp.sin(out) * out)
+
+    # -- reconstructed PR-2 path: fused forward, reference-math backward
+    @jax.custom_vjp
+    def _sum_refbwd(v):
+        return segment_sum_op(v, plan, interpret=True)
+
+    def _sum_refbwd_fwd(v):
+        return _sum_refbwd(v), ()
+
+    def _sum_refbwd_bwd(res, g):
+        return (g[dst],)                       # the old g[segment_ids]
+
+    _sum_refbwd.defvjp(_sum_refbwd_fwd, _sum_refbwd_bwd)
+
+    @jax.custom_vjp
+    def _softmax_refbwd(lg, v):
+        return edge_softmax_op(lg, v, plan, interpret=True)
+
+    def _softmax_refbwd_fwd(lg, v):
+        out = _softmax_refbwd(lg, v)
+        return out, (lg, v, out)
+
+    def _softmax_refbwd_bwd(res, g):
+        lg, v, out = res
+        return reference_edge_softmax_bwd(g, lg, v, out, dst, N)
+
+    _softmax_refbwd.defvjp(_softmax_refbwd_fwd, _softmax_refbwd_bwd)
+
+    # -- segment-sum backward ------------------------------------------------
+    def _sin_loss(out):
+        return jnp.sum(jnp.sin(out) * out)
+
+    fused_sum = jax.jit(jax.grad(lambda v: loss("sum", v, logit, "csc",
+                                                plan)))
+    recon_sum = jax.jit(jax.grad(lambda v: _sin_loss(_sum_refbwd(v))))
+    np.testing.assert_allclose(np.asarray(fused_sum(value)),
+                               np.asarray(recon_sum(value)),
+                               rtol=1e-4, atol=1e-5)
+    assert_sum_stage_fused(jax.make_jaxpr(fused_sum)(value), plan)
+    us_sum_fused = _best_of(fused_sum, value)
+    us_sum_recon = _best_of(recon_sum, value)
+    emit("aggregate/segment_sum_bwd_fused", us_sum_fused,
+         f"E={E};N={N};H={H};D={D};reference_bwd_us={us_sum_recon:.0f}")
+
+    # -- edge-softmax backward -----------------------------------------------
+    fused_sm = jax.jit(jax.grad(lambda lg, v: loss(
+        "softmax", v, lg, "csc", plan), argnums=(0, 1)))
+    recon_sm = jax.jit(jax.grad(
+        lambda lg, v: _sin_loss(_softmax_refbwd(lg, v)), argnums=(0, 1)))
+    for a, b in zip(fused_sm(logit, value), recon_sm(logit, value)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+    assert_sum_stage_fused(jax.make_jaxpr(fused_sm)(logit, value), plan)
+    us_sm_fused = _best_of(fused_sm, logit, value)
+    us_sm_recon = _best_of(recon_sm, logit, value)
+    emit("aggregate/edge_softmax_bwd_fused", us_sm_fused,
+         f"E={E};N={N};H={H};D={D};reference_bwd_us={us_sm_recon:.0f}")
+
+    f32 = 4
+    sum_fused_bytes = f32 * E * D * H
+    sum_ref_bytes = f32 * 2 * E * D * H
+    sm_fused_bytes = f32 * (2 * E * H * D + 2 * E * H)
+    sm_ref_bytes = f32 * (7 * E * H * D + 8 * E * H)
+    return {
+        "edges": E, "num_segments": N, "heads": H, "feature_dim": D,
+        "segment_sum": {
+            "fused_message_bytes": sum_fused_bytes,
+            "reference_message_bytes": sum_ref_bytes,
+            "fused_us_per_call": round(us_sum_fused, 1),
+            "reference_us_per_call": round(us_sum_recon, 1),
+        },
+        "edge_softmax": {
+            "fused_message_bytes": sm_fused_bytes,
+            "reference_message_bytes": sm_ref_bytes,
+            "fused_us_per_call": round(us_sm_fused, 1),
+            "reference_us_per_call": round(us_sm_recon, 1),
+        },
+        # the acceptance line: the fused backward moves fewer message
+        # bytes than the reconstructed reference backward
+        "fused_beats_reference_bytes": bool(
+            sum_fused_bytes < sum_ref_bytes
+            and sm_fused_bytes < sm_ref_bytes),
+        "note": ("wall-clock is interpret-mode emulation (trajectory "
+                 "only); both sides share the fused forward, so the "
+                 "delta is the backward swap"),
+    }
+
+
+def aggregate(out_json: str = "BENCH_aggregate.json", smoke: bool = False):
+    """End-to-end TGAR layer forward AND train step (value_and_grad)
+    under each aggregation backend.
+
+    Times ``forward_block`` and ``value_and_grad(loss_block)`` (NN-T ->
+    NN-G -> Sum -> NN-A plus the reverse flow, jitted) for one model per
+    combine mode, "reference" vs "csc", and dumps the rows to
     ``out_json`` for the perf trajectory of the Sum-stage hot path — plus
-    the fused-vs-pregather traffic comparison of ``_sum_stage_traffic``.
+    the fused-vs-pregather traffic comparison of ``_sum_stage_traffic``
+    and the fused-vs-reference backward comparison of
+    ``_backward_traffic``.
+
+    ``smoke=True`` is the CI lane: tiny shapes, one timing iteration,
+    and the full set of jaxpr contracts (pre-gather-free forward+backward,
+    scatter-free combine-level value_and_grad, fewer segment scatters
+    than the reference end to end) asserted so a contract regression
+    fails the lane, not just the nightly bench.
     """
     import dataclasses
 
     from repro.config import GNNConfig
-    from repro.core.mpgnn import forward_block
+    from repro.core.mpgnn import forward_block, loss_block
     from repro.core.strategies import global_batch_view
     from repro.graph import sbm_graph
     from repro.models import make_gnn
 
-    # traffic comparison first: it is timing-sensitive and the model loop
-    # below leaves the process with enough jit-cache/allocator pressure
-    # to skew interpret-mode samples taken after it
-    traffic = _sum_stage_traffic()
+    if smoke and out_json == "BENCH_aggregate.json":
+        out_json = "BENCH_aggregate_smoke.json"   # don't clobber nightly
 
-    num_nodes, hidden = 2000, 32
+    # traffic comparisons first: they are timing-sensitive and the model
+    # loop below leaves the process with enough jit-cache/allocator
+    # pressure to skew interpret-mode samples taken after it
+    # (the bytes comparison in backward_traffic is analytic accounting —
+    # the enforced guards are the jaxpr contracts asserted inside the
+    # traffic functions and the model loop below)
+    traffic = _sum_stage_traffic() if not smoke else None
+    bwd_traffic = _backward_traffic() if not smoke else None
+
+    if smoke:
+        num_nodes, hidden, layers, iters = 200, 8, 1, 1
+    else:
+        num_nodes, hidden, layers, iters = 2000, 32, 2, 3
     g = sbm_graph(num_nodes=num_nodes, num_classes=4, feature_dim=hidden,
                   p_in=0.01, p_out=0.002, seed=0).add_self_loops()
     rows = []
+    scatter_counts = {}
     for model_name, combine_mode, heads in (
             ("gcn", "sum", 1), ("sage", "mean", 1), ("sage_max", "max", 1),
             ("gat", "softmax", 4)):
         gcn_norm = model_name == "gcn"
-        cfg = GNNConfig(model=model_name, num_layers=2, hidden_dim=hidden,
-                        num_classes=4, feature_dim=hidden, num_heads=heads)
+        cfg = GNNConfig(model=model_name, num_layers=layers,
+                        hidden_dim=hidden, num_classes=4,
+                        feature_dim=hidden, num_heads=heads)
         model = make_gnn(cfg)
         params = model.init(jax.random.PRNGKey(0), hidden)
         view = global_batch_view(g, cfg.num_layers)
@@ -185,30 +339,80 @@ def aggregate(out_json: str = "BENCH_aggregate.json"):
             block = view.as_block(gcn_norm=gcn_norm,
                                   csc_plan=backend == "csc")
             fwd = jax.jit(lambda p, b, m_=m: forward_block(m_, p, b))
+            vag = jax.jit(jax.value_and_grad(
+                lambda p, b, m_=m: loss_block(m_, p, b)))
+            plan = block.csc_plan
             if backend == "csc":
                 # the fused-gather contract, end to end through the model
+                # — forward AND backward (the train-step jaxpr)
                 assert_pregather_free(jax.make_jaxpr(fwd)(params, block),
-                                      block.csc_plan)
-            us = time_call(fwd, params, block, iters=3)
-            emit(f"aggregate/{model_name}_{backend}", us,
-                 f"combine={combine_mode};N={g.num_nodes};E={g.num_edges};"
-                 f"H={heads};D={hidden}")
-            rows.append({"model": model_name, "combine": combine_mode,
-                         "backend": backend, "us_per_call": round(us, 1),
-                         "num_nodes": g.num_nodes,
-                         "num_edges": g.num_edges,
-                         "heads": heads, "hidden_dim": hidden,
-                         "num_layers": cfg.num_layers,
-                         "interpret_mode": jax.default_backend() != "tpu"})
+                                      plan)
+                assert_pregather_free(
+                    jax.make_jaxpr(lambda p: vag(p, block))(params), plan)
+            scatter_counts[(model_name, backend)] = (
+                count_segment_scatters(
+                    jax.make_jaxpr(lambda p: vag(p, block))(params),
+                    block.csc_plan or view.as_block(
+                        gcn_norm=gcn_norm, csc_plan=True).csc_plan))
+            for phase, fn in (("forward", fwd), ("value_and_grad", vag)):
+                us = time_call(fn, params, block, iters=iters)
+                emit(f"aggregate/{model_name}_{backend}_{phase}", us,
+                     f"combine={combine_mode};N={g.num_nodes};"
+                     f"E={g.num_edges};H={heads};D={hidden}")
+                rows.append({"model": model_name, "combine": combine_mode,
+                             "backend": backend, "phase": phase,
+                             "us_per_call": round(us, 1),
+                             "num_nodes": g.num_nodes,
+                             "num_edges": g.num_edges,
+                             "heads": heads, "hidden_dim": hidden,
+                             "num_layers": cfg.num_layers,
+                             "interpret_mode":
+                                 jax.default_backend() != "tpu"})
+        # the Sum-stage fallbacks are gone from the train step: only the
+        # NN-Gather transposes (shared by both backends) may remain
+        assert (scatter_counts[(model_name, "csc")]
+                < scatter_counts[(model_name, "reference")]), (
+            model_name, scatter_counts)
+
+    if smoke:
+        # combine-level certificate: the exact scatter/gather-free
+        # contract of the fused backward, all four modes
+        from repro.core.aggregate import combine
+        rng = np.random.default_rng(0)
+        E, N, H, D = 300, 64, 2, 8
+        ids = rng.integers(0, N, E).astype(np.int32)
+        dst = jnp.asarray(ids)
+        cplan = build_csc_plan(ids, N, block_n=32, block_e=64)
+        value = jnp.asarray(rng.normal(size=(E, H, D)), jnp.float32)
+        logit = jnp.asarray(rng.normal(size=(E, H)), jnp.float32)
+        mask = jnp.asarray(rng.random(E) > 0.2, jnp.float32)
+        for mode in ("sum", "mean", "max", "softmax"):
+            def closs(v, lg):
+                out = combine(mode, {"value": v, "logit": lg}, dst, N,
+                              mask, backend="csc", plan=cplan)
+                return jnp.sum(out * out)
+
+            assert_sum_stage_fused(
+                jax.make_jaxpr(jax.value_and_grad(closs, argnums=(0, 1)))(
+                    value, logit), cplan)
+            emit(f"aggregate/contract_{mode}", 0.0, "sum_stage_fused=ok")
+
     with open(out_json, "w") as f:
         json.dump({"benchmark": "aggregate_layer_forward",
                    "device": jax.default_backend(),
+                   "smoke": smoke,
                    "note": ("csc timings are Pallas interpret-mode off-TPU "
                             "(Python emulation, not kernel speed); the "
                             "trajectory is meaningful per backend/device. "
-                            "csc rows are fused-gather: verified free of "
-                            "the (nb, L_pad, D) pre-gather tensor via "
-                            "jaxpr walk"),
+                            "csc rows are fused-gather, forward and "
+                            "backward: verified free of the (nb, L_pad, "
+                            "D) pre-gather tensor via jaxpr walk, and the "
+                            "train step carries no Sum-stage reference "
+                            "segment fallbacks"),
                    "sum_stage_traffic": traffic,
+                   "backward_traffic": bwd_traffic,
+                   "segment_scatter_counts": {
+                       f"{m}/{b}": c
+                       for (m, b), c in scatter_counts.items()},
                    "rows": rows}, f, indent=2)
     print(f"wrote {out_json} ({len(rows)} rows)")

@@ -13,6 +13,9 @@ def main(argv=None) -> int:
                     help="comma-separated benchmark names")
     ap.add_argument("--fast", action="store_true",
                     help="fewer training steps")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke mode (aggregate bench: tiny shapes, "
+                         "one iteration, jaxpr contracts asserted)")
     args = ap.parse_args(argv)
 
     from benchmarks import gnn_tables, gnn_scaling, kernels_bench, \
@@ -31,7 +34,7 @@ def main(argv=None) -> int:
         "figA3": gnn_scaling.figA3_stage_breakdown,
         "appB": lambda: gnn_scaling.appB_halo_ablation(steps),
         "kernels": kernels_bench.kernels,
-        "aggregate": kernels_bench.aggregate,
+        "aggregate": lambda: kernels_bench.aggregate(smoke=args.smoke),
         "roofline": roofline_table.roofline_table,
     }
     only = set(args.only.split(",")) if args.only else None

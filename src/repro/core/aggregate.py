@@ -27,8 +27,12 @@ working. The plan's index arrays ride into the kernels as scalar-prefetch
 operands and the per-edge gather happens on-chip — the kernel path
 consumes the raw ``(E, H, D)`` messages directly, with no pre-gathered
 ``(nb, L_pad, D)`` intermediate (and multi-head softmax is one launch,
-heads on the kernel grid). Kernel forwards are paired with reference-math
-``custom_vjp`` backwards, so ``jax.grad`` flows through the fused kernels.
+heads on the kernel grid). Kernel forwards are paired with fused Pallas
+``custom_vjp`` backwards (:mod:`repro.kernels.backward`): a plan-driven
+gather kernel for sum, the same gather plus an in-kernel argmax-hit mask
+for max, and a recompute-in-kernel softmax jacobian — so ``jax.grad`` of
+both the block and distributed paths never leaves the planned layout
+(certified by ``ops.assert_sum_stage_fused``).
 """
 from __future__ import annotations
 
@@ -40,8 +44,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.ops import (CSCPlan, edge_softmax_op, segment_max_op,
-                               segment_sum_op)
+from repro.kernels.ops import (CSCPlan, edge_softmax_bwd_op,
+                               edge_softmax_fwd_op, edge_softmax_op,
+                               segment_max_bwd_op, segment_max_op,
+                               segment_sum_bwd_op, segment_sum_op)
 from repro.kernels.segment_sum import NEG   # the one masking sentinel
 
 
@@ -137,13 +143,21 @@ def _int_zeros(x):
     return np.zeros(np.shape(x), dtype=jax.dtypes.float0)
 
 
+def _plan_from_children(plan_children, meta, num_segments, num_edges):
+    """Rebuild the CSCPlan from its traced index arrays (the pytree
+    children ride through the custom_vjp as regular operands so the
+    backward kernels can scalar-prefetch them)."""
+    bn, be, _ = meta
+    return CSCPlan(plan_children[0], plan_children[1], plan_children[2],
+                   plan_children[0].shape[0], bn, be, num_segments,
+                   num_edges)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
 def _csc_segment_sum(num_segments, meta, data, plan_children, segment_ids):
-    bn, be, interpret = meta
-    plan = CSCPlan(plan_children[0], plan_children[1],
-                   plan_children[0].shape[0], bn, be, num_segments,
-                   data.shape[0])
-    return segment_sum_op(data, plan, interpret=interpret)
+    plan = _plan_from_children(plan_children, meta, num_segments,
+                               data.shape[0])
+    return segment_sum_op(data, plan, interpret=meta[2])
 
 
 def _csc_segment_sum_fwd(num_segments, meta, data, plan_children,
@@ -155,8 +169,13 @@ def _csc_segment_sum_fwd(num_segments, meta, data, plan_children,
 
 def _csc_segment_sum_bwd(num_segments, meta, res, g):
     segment_ids, plan_children = res
-    # segment-sum is linear: d(data) = gather of the output cotangent
-    return (g[segment_ids],
+    # segment-sum is linear: d(data) = gather of the output cotangent —
+    # the plan-driven Pallas gather kernel (d_data[e] = g[dst[e]], dst
+    # scalar-prefetched from the plan's inverse map), not a g[ids] jnp
+    # gather: the backward stays in the planned layout
+    plan = _plan_from_children(plan_children, meta, num_segments,
+                               segment_ids.shape[0])
+    return (segment_sum_bwd_op(g, plan, interpret=meta[2]),
             tuple(_int_zeros(c) for c in plan_children),
             _int_zeros(segment_ids))
 
@@ -166,11 +185,9 @@ _csc_segment_sum.defvjp(_csc_segment_sum_fwd, _csc_segment_sum_bwd)
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
 def _csc_segment_max(num_segments, meta, data, plan_children, segment_ids):
-    bn, be, interpret = meta
-    plan = CSCPlan(plan_children[0], plan_children[1],
-                   plan_children[0].shape[0], bn, be, num_segments,
-                   data.shape[0])
-    return segment_max_op(data, plan, interpret=interpret)
+    plan = _plan_from_children(plan_children, meta, num_segments,
+                               data.shape[0])
+    return segment_max_op(data, plan, interpret=meta[2])
 
 
 def _csc_segment_max_fwd(num_segments, meta, data, plan_children,
@@ -183,9 +200,11 @@ def _csc_segment_max_fwd(num_segments, meta, data, plan_children,
 def _csc_segment_max_bwd(num_segments, meta, res, g):
     data, out, segment_ids, plan_children = res
     # subgradient: cotangent flows to entries attaining the segment max
-    # (ties share it, matching jax.ops.segment_max)
-    hit = (data == out[segment_ids]).astype(g.dtype)
-    return (g[segment_ids] * hit,
+    # (ties share it, matching jax.ops.segment_max); the argmax-hit mask
+    # against the saved forward output is fused into the gather kernel
+    plan = _plan_from_children(plan_children, meta, num_segments,
+                               data.shape[0])
+    return (segment_max_bwd_op(g, out, data, plan, interpret=meta[2]),
             tuple(_int_zeros(c) for c in plan_children),
             _int_zeros(segment_ids))
 
@@ -196,26 +215,52 @@ _csc_segment_max.defvjp(_csc_segment_max_fwd, _csc_segment_max_bwd)
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
 def _csc_edge_softmax(num_segments, meta, logits, values, plan_children,
                       segment_ids):
-    bn, be, interpret = meta
-    plan = CSCPlan(plan_children[0], plan_children[1],
-                   plan_children[0].shape[0], bn, be, num_segments,
-                   logits.shape[0])
-    return edge_softmax_op(logits, values, plan, interpret=interpret)
+    plan = _plan_from_children(plan_children, meta, num_segments,
+                               logits.shape[0])
+    return edge_softmax_op(logits, values, plan, interpret=meta[2])
 
 
 def _csc_edge_softmax_fwd(num_segments, meta, logits, values, plan_children,
                           segment_ids):
-    out = _csc_edge_softmax(num_segments, meta, logits, values,
-                            plan_children, segment_ids)
-    return out, (logits, values, out, segment_ids, plan_children)
+    plan = _plan_from_children(plan_children, meta, num_segments,
+                               logits.shape[0])
+    # the fused forward launch also emits the per-destination softmax
+    # stats (running max m, denominator den) — node-proportional
+    # residuals the backward rebuilds p_e from in-kernel, replacing the
+    # old full reference segment_max/segment_sum recompute
+    out, m, den = edge_softmax_fwd_op(logits, values, plan,
+                                      interpret=meta[2])
+    return out, (logits, values, out, m, den, segment_ids, plan_children)
 
 
 def _csc_edge_softmax_bwd(num_segments, meta, res, g):
-    logits, values, out, segment_ids, plan_children = res
-    # reference softmax jacobian; the fused kernel is forward-only. With
-    # p_e = softmax(logit_e) over each destination's in-edges:
+    logits, values, out, m, den, segment_ids, plan_children = res
+    # recompute-in-kernel softmax jacobian. With p_e = softmax(logit_e)
+    # over each destination's in-edges:
     #   d v_e     = p_e * g_i
     #   d logit_e = p_e * (v_e . g_i  -  out_i . g_i)
+    # p_e is rebuilt inside the kernel from the saved logits + stats; no
+    # (E, H) probability tensor, no reference segment passes, one launch
+    # with heads on the grid (see kernels/backward.py).
+    plan = _plan_from_children(plan_children, meta, num_segments,
+                               logits.shape[0])
+    d_logits, d_values = edge_softmax_bwd_op(g, logits, values, out, m,
+                                             den, plan, interpret=meta[2])
+    return (d_logits, d_values,
+            tuple(_int_zeros(c) for c in plan_children),
+            _int_zeros(segment_ids))
+
+
+_csc_edge_softmax.defvjp(_csc_edge_softmax_fwd, _csc_edge_softmax_bwd)
+
+
+def reference_edge_softmax_bwd(g, logits, values, out, segment_ids,
+                               num_segments):
+    """The pre-fusion reference-math softmax backward, kept verbatim as
+    (a) the documented oracle for the kernel backward and (b) the
+    reconstruction the benchmark times the fused backward against:
+    a full segment_max/segment_sum recompute plus three ``x[segment_ids]``
+    edge gathers, all through HBM."""
     seg_max = jax.ops.segment_max(logits, segment_ids, num_segments)
     seg_max = jnp.maximum(seg_max, NEG)
     ex = jnp.exp(logits - seg_max[segment_ids])
@@ -227,12 +272,7 @@ def _csc_edge_softmax_bwd(num_segments, meta, res, g):
     vg = jnp.sum(values * g_e, axis=-1)                    # (E, H)
     og = jnp.sum(out[segment_ids] * g_e, axis=-1)          # (E, H)
     d_logits = p * (vg - og)
-    return (d_logits, d_values,
-            tuple(_int_zeros(c) for c in plan_children),
-            _int_zeros(segment_ids))
-
-
-_csc_edge_softmax.defvjp(_csc_edge_softmax_fwd, _csc_edge_softmax_bwd)
+    return d_logits, d_values
 
 
 class CSCBackend(AggregationBackend):
@@ -259,7 +299,8 @@ class CSCBackend(AggregationBackend):
 
     @staticmethod
     def _children(plan: CSCPlan):
-        return (jnp.asarray(plan.gather_idx), jnp.asarray(plan.local_ids))
+        return (jnp.asarray(plan.gather_idx), jnp.asarray(plan.local_ids),
+                jnp.asarray(plan.edge_dst))
 
     def segment_sum(self, data, segment_ids, num_segments, plan=None):
         if plan is None:

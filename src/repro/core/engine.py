@@ -215,6 +215,11 @@ class HybridParallelEngine:
                 [p.gather_idx for p in plans]))
             data["csc_local"] = shd(np.stack(
                 [p.local_ids for p in plans]))
+            # the plans' inverse maps: per-shard (E_pad,) destination
+            # rows, scalar-prefetched by the fused backward kernels so
+            # the sharded grad path never falls back to g[ids] gathers
+            data["csc_dst"] = shd(np.stack(
+                [p.edge_dst for p in plans]))
         return data
 
     def stage_view(self, view_arrays: dict):
@@ -250,6 +255,7 @@ class HybridParallelEngine:
             meta = self._csc_meta
             shard["csc_plan"] = CSCPlan(
                 shard.pop("csc_gather"), shard.pop("csc_local"),
+                shard.pop("csc_dst"),
                 meta.num_blocks, meta.block_n, meta.block_e,
                 meta.num_segments, meta.num_edges)
         return shard
@@ -324,30 +330,35 @@ class HybridParallelEngine:
         specs_view = {k: P(self.axis)
                       for k in ("node_active", "edge_active", "loss_mask")}
 
-        def fn(params, view_arrays):
-            view = self.stage_view(view_arrays)
-
+        # jit the shard_map closure ONCE (like make_loss_and_grad): every
+        # call used to re-trace the whole distributed forward
+        @jax.jit
+        def infer_jit(params, data, view):
             def shard_fn(params, data, view):
                 shard = self._local_shard(data, view)
                 logits = self._forward_local(params, shard)
                 return logits[None]
 
-            out = shard_map(
+            return shard_map(
                 shard_fn, mesh=self.mesh,
                 in_specs=(P(), specs_data, specs_view),
                 out_specs=P(self.axis),
-            )(params, self._device_data, view)
-            return out  # (P, n_m_pad, C) aligned with plan.masters
+            )(params, data, view)
+
+        def fn(params, view_arrays):
+            view = self.stage_view(view_arrays)
+            # (P, n_m_pad, C) aligned with plan.masters
+            return infer_jit(params, self._device_data, view)
 
         return fn
 
     def gather_predictions(self, logits_sharded) -> np.ndarray:
-        """(P, n_m_pad, C) -> (N, C) in global node order."""
+        """(P, n_m_pad, C) -> (N, C) in global node order: one masked
+        scatter over all partitions (valid master slots land on their
+        global node row; padding slots drop out with the mask)."""
         plan = self.plan
-        out = np.zeros((len(plan.owner), logits_sharded.shape[-1]),
-                       np.float32)
         lg = np.asarray(logits_sharded)
-        for p in range(plan.P):
-            valid = plan.master_mask[p] > 0
-            out[plan.masters[p][valid]] = lg[p][valid]
+        out = np.zeros((len(plan.owner), lg.shape[-1]), np.float32)
+        valid = plan.master_mask > 0                      # (P, n_m_pad)
+        out[plan.masters[valid]] = lg[valid]
         return out

@@ -1,0 +1,259 @@
+"""Pallas TPU kernels: fused Sum-stage backward passes.
+
+The forward CSC kernels (segment_sum.py / edge_softmax.py) aggregate raw
+``(E, ...)`` edge messages into per-destination rows with the per-edge
+gather fused on-chip. Their cotangents flow the other way — every edge
+needs a value read from its destination row — and until this module the
+``custom_vjp`` backwards were reference math: ``g[segment_ids]`` jnp
+gathers plus a full ``jax.ops.segment_*`` softmax recompute, i.e. under
+``jax.grad`` roughly two thirds of a train step's memory traffic bypassed
+the planned layout entirely (the "message bombing" the forward
+eliminated). These kernels close that gap: the whole train step stays
+pre-gather-free (see ``ops.assert_sum_stage_fused``).
+
+Layout
+------
+Backward is a *scatter-free* pass when organized over the **edge axis**:
+``d_data[e] = f(g[dst[e]])`` touches each output row exactly once. The
+grid therefore tiles the (padded) edge axis in ``block_e`` chunks; the
+node-indexed arrays (cotangent ``g``, saved forward output, softmax
+stats) stay resident as constant blocks, and the per-edge destination
+comes from the plan's **inverse map** ``edge_dst`` — built host-side in
+``build_csc_plan`` by inverting ``gather_idx``/``local_ids`` (lane
+``(b, l)`` holds edge ``gather_idx[b, l]`` destined for row
+``b*block_n + local_ids[b, l]``) and scalar-prefetched like the forward
+plan indices. Pad lanes carry ``num_segments`` (clip-gathered; the
+outputs are allocated at the true edge count, so the final partial
+block is an ordinary masked boundary block — no pad copies, no slices).
+
+Three kernels:
+
+- :func:`segment_sum_bwd_csc` — the linear backward, a pure plan-driven
+  gather: ``d_data[e] = g[dst[e]]``; d-tiled.
+- :func:`segment_max_bwd_csc` — the same gather plus an in-kernel
+  argmax-hit mask against the saved forward output (ties share the
+  cotangent, matching ``jax.ops.segment_max``).
+- :func:`edge_softmax_bwd_csc` — recompute-in-kernel: rebuilds the edge
+  probability ``p_e = exp(logit_e - m_i) / den_i`` inside each edge block
+  from the saved logits and the forward kernel's per-destination softmax
+  stats (``m``/``den`` ride out of the fused forward launch as two tiny
+  node-proportional outputs). No ``(E, H)`` probability tensor is ever
+  materialized in HBM and no reference ``segment_max``/``segment_sum``
+  recompute runs; ``d_logits`` and ``d_values`` come out of **one**
+  launch with heads on the grid, mirroring the forward.
+
+VMEM geometry mirrors the forward budget (documented in
+segment_sum.py): per grid step the gather kernels hold the resident
+``(N, BD)`` cotangent block plus a ``(BE, BD)`` output tile; the softmax
+backward holds per-head residents ``(N, D)`` cotangent + four ``(N,)``
+stat columns and ``(BE, D)`` tiles — no ``(BE, BN, BD)`` candidate
+expansion anywhere, so the d-tile cap is looser (128) than the forward
+max kernel's (64).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.segment_sum import NEG, _pick_block_d
+
+
+# ---------------------------------------------------------------------------
+# segment-sum backward: plan-driven per-edge gather
+# ---------------------------------------------------------------------------
+
+
+def _gather_bwd_kernel(dst_ref, g_ref, out_ref, *, block_e: int):
+    """One (d_tile, edge_chunk) grid step of ``d_data[e] = g[dst[e]]``.
+
+    dst_ref: (E_pad,) int32 scalar-prefetch — the plan's inverse map
+             (pad lanes hold num_segments; clipped, masked by the
+             boundary write).
+    g_ref:   (N, BD) f32 resident cotangent block.
+    out_ref: (BE, BD) f32 edge tile of the message cotangent.
+    """
+    c = pl.program_id(1)
+    idx = dst_ref[pl.ds(c * block_e, block_e)]           # (BE,)
+    out_ref[...] = jnp.take(g_ref[...], idx, axis=0, mode="clip")
+
+
+def segment_sum_bwd_csc(g: jax.Array, edge_dst: jax.Array, num_edges: int,
+                        block_e: int = 256, block_d: int = 0,
+                        interpret: bool = False):
+    """Backward of the fused segment-sum: gather the output cotangent onto
+    the edge axis through the plan's inverse map.
+
+    g:        (N, D) cotangent of the (sliced) kernel output.
+    edge_dst: (E_pad,) int32, E_pad % block_e == 0; lane e holds dst[e],
+              pad lanes hold N (clip-gathered, boundary-masked).
+    returns   (num_edges, D).
+    """
+    n, d = g.shape
+    e_pad = edge_dst.shape[0]
+    assert e_pad % block_e == 0 and e_pad >= num_edges
+    if num_edges == 0:
+        return jnp.zeros((0, d), g.dtype)
+    bd = block_d or _pick_block_d(d, cap=128)
+    assert d % bd == 0, (d, bd)
+    # the output is allocated at the true edge count: the final partial
+    # block is a masked boundary write (no (E_pad, d) intermediate, no
+    # slice, and — as every lane is independent — no pad copies of the
+    # operands either)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(d // bd, e_pad // block_e),
+        in_specs=[pl.BlockSpec((n, bd), lambda dt, c, dst: (0, dt))],
+        out_specs=pl.BlockSpec((block_e, bd), lambda dt, c, dst: (c, dt)),
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_bwd_kernel, block_e=block_e),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_edges, d), g.dtype),
+        interpret=interpret,
+    )(edge_dst, g)
+
+
+# ---------------------------------------------------------------------------
+# segment-max backward: the gather + an in-kernel argmax-hit mask
+# ---------------------------------------------------------------------------
+
+
+def _gather_max_bwd_kernel(dst_ref, g_ref, fwd_ref, data_ref, out_ref, *,
+                           block_e: int):
+    """Gather backward masked by ``data == forward_max`` (subgradient:
+    ties share the cotangent, matching ``jax.ops.segment_max``)."""
+    c = pl.program_id(1)
+    idx = dst_ref[pl.ds(c * block_e, block_e)]           # (BE,)
+    ge = jnp.take(g_ref[...], idx, axis=0, mode="clip")
+    fe = jnp.take(fwd_ref[...], idx, axis=0, mode="clip")
+    out_ref[...] = ge * (data_ref[...] == fe).astype(ge.dtype)
+
+
+def segment_max_bwd_csc(g: jax.Array, fwd_out: jax.Array, data: jax.Array,
+                        edge_dst: jax.Array, num_edges: int,
+                        block_e: int = 256, block_d: int = 0,
+                        interpret: bool = False):
+    """Backward of the fused segment-max.
+
+    g / fwd_out: (N, D) cotangent and saved forward output.
+    data:        (E, D) the forward's edge operand (for the hit mask).
+    returns      (num_edges, D).
+    """
+    n, d = g.shape
+    e_pad = edge_dst.shape[0]
+    assert fwd_out.shape == (n, d) and data.shape == (num_edges, d)
+    assert e_pad % block_e == 0 and e_pad >= num_edges
+    if num_edges == 0:
+        return jnp.zeros((0, d), g.dtype)
+    bd = block_d or _pick_block_d(d, cap=128)
+    assert d % bd == 0, (d, bd)
+    # edge arrays stay at their true length: the final partial block is
+    # a boundary block (masked write, padded read) — no pad copy of the
+    # saved forward operand per backward call
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(d // bd, e_pad // block_e),
+        in_specs=[
+            pl.BlockSpec((n, bd), lambda dt, c, dst: (0, dt)),
+            pl.BlockSpec((n, bd), lambda dt, c, dst: (0, dt)),
+            pl.BlockSpec((block_e, bd), lambda dt, c, dst: (c, dt)),
+        ],
+        out_specs=pl.BlockSpec((block_e, bd), lambda dt, c, dst: (c, dt)),
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_max_bwd_kernel, block_e=block_e),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_edges, d), g.dtype),
+        interpret=interpret,
+    )(edge_dst, g, fwd_out, data)
+
+
+# ---------------------------------------------------------------------------
+# edge-softmax backward: recompute p_e in-kernel, one launch, heads on grid
+# ---------------------------------------------------------------------------
+
+
+def _edge_softmax_bwd_kernel(dst_ref, logit_ref, val_ref, g_ref, m_ref,
+                             den_ref, og_ref, dlogit_ref, dval_ref, *,
+                             block_e: int):
+    """One (head, edge_chunk) grid step.
+
+    With p_e = softmax_e(logit) over destination i's in-edges:
+        d_value_e = p_e * g_i
+        d_logit_e = p_e * (v_e . g_i  -  out_i . g_i)
+    p_e is rebuilt here from the saved logits and the forward's softmax
+    stats (running max m_i, denominator den_i) — never materialized as an
+    (E, H) tensor; ``og = out . g`` is the node-proportional contraction
+    precomputed by the wrapper.
+    """
+    c = pl.program_id(1)
+    idx = dst_ref[pl.ds(c * block_e, block_e)]           # (BE,)
+    logit = logit_ref[:, 0]                              # (BE,)
+    m_e = jnp.take(m_ref[:, 0], idx, mode="clip")
+    den_e = jnp.take(den_ref[:, 0], idx, mode="clip")
+    # recompute-in-kernel; masked edges (logit == NEG) and pad lanes get
+    # p = 0 exactly, matching the reference math's masked exponentials
+    p = jnp.exp(logit - m_e) / jnp.maximum(den_e, 1e-20)
+    p = jnp.where(logit > NEG / 2, p, 0.0)
+    gi = jnp.take(g_ref[:, 0, :], idx, axis=0, mode="clip")   # (BE, D)
+    dval_ref[...] = (p[:, None] * gi)[:, None, :].astype(dval_ref.dtype)
+    vg = jnp.sum(val_ref[:, 0, :] * gi, axis=-1)              # (BE,)
+    oge = jnp.take(og_ref[:, 0], idx, mode="clip")
+    dlogit_ref[...] = (p * (vg - oge))[:, None].astype(dlogit_ref.dtype)
+
+
+def edge_softmax_bwd_csc(g: jax.Array, logits: jax.Array, values: jax.Array,
+                         m: jax.Array, den: jax.Array, og: jax.Array,
+                         edge_dst: jax.Array, num_edges: int,
+                         block_e: int = 256, interpret: bool = False):
+    """Backward of the fused edge-softmax aggregation — one launch, heads
+    on the grid (mirroring the forward).
+
+    g (N, H, D) output cotangent; logits (E, H) / values (E, H, D) saved
+    forward operands; m / den (N, H) the forward kernel's softmax stats;
+    og (N, H) = sum(out * g, -1). Returns (d_logits (E, H),
+    d_values (E, H, D)).
+    """
+    n, h, d = g.shape
+    e_pad = edge_dst.shape[0]
+    assert logits.shape == (num_edges, h)
+    assert values.shape == (num_edges, h, d)
+    assert m.shape == (n, h) and den.shape == (n, h) and og.shape == (n, h)
+    assert e_pad % block_e == 0 and e_pad >= num_edges
+    if num_edges == 0:
+        return (jnp.zeros((0, h), logits.dtype),
+                jnp.zeros((0, h, d), values.dtype))
+    # saved edge operands stay at their true length — the final partial
+    # block is a boundary block, so no per-call pad copies of the (E, H)
+    # logits / (E, H, D) values residuals
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        # head axis OUTERMOST (as in the forward): the per-head residents
+        # (cotangent block, stat columns) are fetched once per head
+        grid=(h, e_pad // block_e),
+        in_specs=[
+            pl.BlockSpec((block_e, 1), lambda hd, c, dst: (c, hd)),
+            pl.BlockSpec((block_e, 1, d), lambda hd, c, dst: (c, hd, 0)),
+            pl.BlockSpec((n, 1, d), lambda hd, c, dst: (0, hd, 0)),
+            pl.BlockSpec((n, 1), lambda hd, c, dst: (0, hd)),
+            pl.BlockSpec((n, 1), lambda hd, c, dst: (0, hd)),
+            pl.BlockSpec((n, 1), lambda hd, c, dst: (0, hd)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_e, 1), lambda hd, c, dst: (c, hd)),
+            pl.BlockSpec((block_e, 1, d), lambda hd, c, dst: (c, hd, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_edge_softmax_bwd_kernel, block_e=block_e),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((num_edges, h), logits.dtype),
+            jax.ShapeDtypeStruct((num_edges, h, d), values.dtype),
+        ],
+        interpret=interpret,
+    )(edge_dst, logits, values, g, m, den, og)

@@ -21,6 +21,13 @@ with the chunk axis innermost, accumulating into its own (BN, D) output
 tile. Reached from the forward paths through the ``"csc"``
 backend of :mod:`repro.core.aggregate` (GAT/GAT-E ``softmax`` combine on a
 single shard).
+
+The launch also emits the per-destination softmax stats (running max
+``m`` and denominator ``l``) as two node-proportional outputs: the
+recompute-in-kernel backward (backward.py) rebuilds the edge
+probabilities from them instead of re-running reference segment passes,
+so no ``(E, H)`` probability tensor ever exists in HBM in either
+direction.
 """
 from __future__ import annotations
 
@@ -35,8 +42,8 @@ from repro.kernels.segment_sum import NEG
 
 
 def _edge_softmax_kernel(idx_ref, ids_ref, logit_ref, val_ref, out_ref,
-                         m_ref, l_ref, acc_ref, *, block_n: int,
-                         block_e: int):
+                         mstat_ref, lstat_ref, m_ref, l_ref, acc_ref, *,
+                         block_n: int, block_e: int):
     b = pl.program_id(1)
     chunk = pl.program_id(2)
     nc = pl.num_programs(2)
@@ -80,6 +87,12 @@ def _edge_softmax_kernel(idx_ref, ids_ref, logit_ref, val_ref, out_ref,
         out_ref[...] = (acc_ref[...]
                         / jnp.maximum(l_ref[...], 1e-20))[:, None, :].astype(
                             out_ref.dtype)
+        # the per-destination softmax stats (running max, denominator)
+        # ride out of the launch: the recompute-in-kernel backward
+        # (backward.py) rebuilds p_e from them instead of re-running
+        # reference segment passes — two node-proportional extra outputs
+        mstat_ref[...] = m_ref[...].astype(mstat_ref.dtype)
+        lstat_ref[...] = l_ref[...].astype(lstat_ref.dtype)
 
 
 def edge_softmax_csc(logits, values, gather_idx, local_ids,
@@ -88,7 +101,10 @@ def edge_softmax_csc(logits, values, gather_idx, local_ids,
     """Fused-gather multi-head edge softmax.
 
     logits (E, H), values (E, H, D), gather_idx/local_ids (nb, L_pad)
-    -> (nb*block_n, H, D); one launch, heads on the grid.
+    -> (out (nb*block_n, H, D), m (nb*block_n, H), l (nb*block_n, H)):
+    the aggregation plus the per-destination softmax stats (running max
+    and denominator) the fused backward rebuilds p_e from; one launch,
+    heads on the grid.
     """
     e, h = logits.shape
     d = values.shape[-1]
@@ -96,7 +112,9 @@ def edge_softmax_csc(logits, values, gather_idx, local_ids,
     assert nb == num_blocks and l_pad % block_e == 0
     assert values.shape == (e, h, d), (values.shape, logits.shape)
     if e == 0:
-        return jnp.zeros((num_blocks * block_n, h, d), values.dtype)
+        return (jnp.zeros((num_blocks * block_n, h, d), values.dtype),
+                jnp.full((num_blocks * block_n, h), NEG, jnp.float32),
+                jnp.zeros((num_blocks * block_n, h), jnp.float32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         # head axis OUTERMOST so the per-head (E, 1, D) value block is
@@ -109,8 +127,11 @@ def edge_softmax_csc(logits, values, gather_idx, local_ids,
             pl.BlockSpec((e, 1), lambda hd, b, c, idx: (0, hd)),
             pl.BlockSpec((e, 1, d), lambda hd, b, c, idx: (0, hd, 0)),
         ],
-        out_specs=pl.BlockSpec((block_n, 1, d),
-                               lambda hd, b, c, idx: (b, hd, 0)),
+        out_specs=[
+            pl.BlockSpec((block_n, 1, d), lambda hd, b, c, idx: (b, hd, 0)),
+            pl.BlockSpec((block_n, 1), lambda hd, b, c, idx: (b, hd)),
+            pl.BlockSpec((block_n, 1), lambda hd, b, c, idx: (b, hd)),
+        ],
         scratch_shapes=[
             pltpu.VMEM((block_n, 1), jnp.float32),
             pltpu.VMEM((block_n, 1), jnp.float32),
@@ -121,7 +142,11 @@ def edge_softmax_csc(logits, values, gather_idx, local_ids,
         functools.partial(_edge_softmax_kernel, block_n=block_n,
                           block_e=block_e),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((num_blocks * block_n, h, d),
-                                       values.dtype),
+        out_shape=[
+            jax.ShapeDtypeStruct((num_blocks * block_n, h, d),
+                                 values.dtype),
+            jax.ShapeDtypeStruct((num_blocks * block_n, h), jnp.float32),
+            jax.ShapeDtypeStruct((num_blocks * block_n, h), jnp.float32),
+        ],
         interpret=interpret,
     )(gather_idx, local_ids, logits, values)

@@ -13,6 +13,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.backward import (edge_softmax_bwd_csc,
+                                    segment_max_bwd_csc,
+                                    segment_sum_bwd_csc)
 from repro.kernels.segment_sum import segment_sum_csc, segment_max_csc
 from repro.kernels.wkv6 import wkv6 as _wkv6_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
@@ -37,6 +40,10 @@ class CSCPlan:
     #                           lane; the fused kernels clip it and the
     #                           local_ids masking nulls its contribution)
     local_ids: np.ndarray     # (nb, L_pad) int32 in [0, BN]; BN = padding
+    edge_dst: np.ndarray      # (E_pad,) int32: the plan's inverse map,
+    #                           lane e = destination row of edge e (pad
+    #                           lanes hold num_segments) — drives the
+    #                           backward kernels' per-edge gather
     num_blocks: int
     block_n: int
     block_e: int
@@ -45,13 +52,13 @@ class CSCPlan:
 
 
 def _plan_flatten(p: CSCPlan):
-    return ((p.gather_idx, p.local_ids),
+    return ((p.gather_idx, p.local_ids, p.edge_dst),
             (p.num_blocks, p.block_n, p.block_e, p.num_segments,
              p.num_edges))
 
 
 def _plan_unflatten(aux, children):
-    return CSCPlan(children[0], children[1], *aux)
+    return CSCPlan(children[0], children[1], children[2], *aux)
 
 
 jax.tree_util.register_pytree_node(CSCPlan, _plan_flatten, _plan_unflatten)
@@ -83,7 +90,17 @@ def build_csc_plan(segment_ids: np.ndarray, num_segments: int,
         sl = order[starts[b]:ends[b]]
         gather[b, :lens[b]] = sl
         local[b, :lens[b]] = ids[sl] - b * block_n
-    return CSCPlan(gather, local, nb, block_n, block_e, num_segments, E)
+    # the inverse map the backward kernels scalar-prefetch: lane (b, l)
+    # holds edge gather[b, l] destined for row b*block_n + local[b, l],
+    # so inverting the plan gives each edge its destination row. Padded
+    # to a block_e multiple (pad lanes = num_segments, clip-gathered).
+    e_pad = max(block_e, ((E + block_e - 1) // block_e) * block_e)
+    edge_dst = np.full(e_pad, num_segments, np.int32)
+    valid = local < block_n
+    rows = np.arange(nb, dtype=np.int32)[:, None] * block_n + local
+    edge_dst[gather[valid]] = rows[valid]
+    return CSCPlan(gather, local, edge_dst, nb, block_n, block_e,
+                   num_segments, E)
 
 
 def build_csc_plans_stacked(segment_ids_rows, num_segments: int,
@@ -102,8 +119,8 @@ def build_csc_plans_stacked(segment_ids_rows, num_segments: int,
                         constant_values=p.num_edges)     # pad lane
         local = np.pad(p.local_ids, ((0, 0), (0, extra)),
                        constant_values=p.block_n)        # dead lane
-        return CSCPlan(gather, local, p.num_blocks, p.block_n, p.block_e,
-                       p.num_segments, p.num_edges)
+        return CSCPlan(gather, local, p.edge_dst, p.num_blocks, p.block_n,
+                       p.block_e, p.num_segments, p.num_edges)
 
     return [widen(p) for p in plans]
 
@@ -151,21 +168,70 @@ def segment_max_op(data: jax.Array, plan: CSCPlan,
     return out.reshape((plan.num_segments,) + trailing)
 
 
-def jaxpr_avals(closed_jaxpr):
-    """Yield the output aval of every equation, recursing into sub-jaxprs
-    (pjit bodies, custom_vjp calls, scans ...).
+# -- fused backward wrappers (the custom_vjp bodies in core/aggregate) ------
 
-    Verification hook for the fused-gather contract: the bench and the
-    kernel tests walk the csc path's jaxpr and assert that no equation
-    materializes a ``(nb, L_pad, D)`` pre-gathered message tensor.
-    """
+
+@functools.partial(jax.jit, static_argnames=("num_edges", "block_e",
+                                             "interpret"))
+def _segment_sum_bwd_planned(g, edge_dst, num_edges: int, block_e: int,
+                             interpret: bool):
+    return segment_sum_bwd_csc(g, edge_dst, num_edges, block_e,
+                               interpret=interpret)
+
+
+def segment_sum_bwd_op(g: jax.Array, plan: CSCPlan,
+                       interpret: bool = True) -> jax.Array:
+    """Backward of :func:`segment_sum_op`: g (num_segments, ...trailing)
+    -> (E, ...trailing) via the plan-driven gather kernel (segment-sum is
+    linear, so d_data[e] = g[dst[e]])."""
+    assert g.shape[0] == plan.num_segments
+    flat, trailing = _reshape_to_2d(g)
+    out = _segment_sum_bwd_planned(flat, jnp.asarray(plan.edge_dst),
+                                   plan.num_edges, plan.block_e, interpret)
+    return out.reshape((plan.num_edges,) + trailing)
+
+
+@functools.partial(jax.jit, static_argnames=("num_edges", "block_e",
+                                             "interpret"))
+def _segment_max_bwd_planned(g, fwd_out, data, edge_dst, num_edges: int,
+                             block_e: int, interpret: bool):
+    return segment_max_bwd_csc(g, fwd_out, data, edge_dst, num_edges,
+                               block_e, interpret=interpret)
+
+
+def segment_max_bwd_op(g: jax.Array, fwd_out: jax.Array, data: jax.Array,
+                       plan: CSCPlan, interpret: bool = True) -> jax.Array:
+    """Backward of :func:`segment_max_op`: the gather kernel plus the
+    in-kernel argmax-hit mask against the saved forward output."""
+    assert g.shape[0] == plan.num_segments
+    assert data.shape[0] == plan.num_edges
+    gf, trailing = _reshape_to_2d(g)
+    ff, _ = _reshape_to_2d(fwd_out)
+    df, _ = _reshape_to_2d(data)
+    out = _segment_max_bwd_planned(gf, ff, df, jnp.asarray(plan.edge_dst),
+                                   plan.num_edges, plan.block_e, interpret)
+    return out.reshape((plan.num_edges,) + trailing)
+
+
+def jaxpr_eqns(closed_jaxpr, skip_pallas_bodies: bool = False):
+    """Yield every equation, recursing into sub-jaxprs (pjit bodies,
+    custom_vjp calls, scans, pallas kernel bodies ...) — including the
+    VJP jaxprs ``jax.grad``/``jax.value_and_grad`` splice in, so the
+    fused-path contracts below certify the backward pass too.
+
+    ``skip_pallas_bodies`` stops the recursion at ``pallas_call``
+    equations: the gather/scatter fallback checks must not flag the
+    kernels' own on-chip block gathers (whose tile shapes can collide
+    with the edge/segment dims, e.g. when E == block_e)."""
     import jax.core as jcore
-    stack = [closed_jaxpr.jaxpr]
+    stack = [closed_jaxpr.jaxpr if hasattr(closed_jaxpr, "jaxpr")
+             else closed_jaxpr]
     while stack:
         jaxpr = stack.pop()
         for eqn in jaxpr.eqns:
-            for var in eqn.outvars:
-                yield var.aval
+            yield eqn
+            if skip_pallas_bodies and eqn.primitive.name == "pallas_call":
+                continue
             for val in eqn.params.values():
                 for sub in (val if isinstance(val, (tuple, list))
                             else (val,)):
@@ -173,6 +239,18 @@ def jaxpr_avals(closed_jaxpr):
                         stack.append(sub.jaxpr)
                     elif isinstance(sub, jcore.Jaxpr):
                         stack.append(sub)
+
+
+def jaxpr_avals(closed_jaxpr):
+    """Yield the output aval of every equation, recursing into sub-jaxprs.
+
+    Verification hook for the fused-gather contract: the bench and the
+    kernel tests walk the csc path's jaxpr and assert that no equation
+    materializes a ``(nb, L_pad, D)`` pre-gathered message tensor.
+    """
+    for eqn in jaxpr_eqns(closed_jaxpr):
+        for var in eqn.outvars:
+            yield var.aval
 
 
 def assert_pregather_free(closed_jaxpr, plan: CSCPlan):
@@ -191,6 +269,74 @@ def assert_pregather_free(closed_jaxpr, plan: CSCPlan):
         assert not pregather, (
             f"pre-gathered message tensor {shape} found in jaxpr "
             f"(plan: nb={nb}, L_pad={l_pad})")
+
+
+_SCATTER_PRIMS = ("scatter", "scatter-add", "scatter-max", "scatter-min",
+                  "scatter-mul")
+
+
+def _is_segment_scatter(eqn, num_edges: int) -> bool:
+    """A scatter whose updates carry the plan's edge axis — the signature
+    of a reference ``jax.ops.segment_*`` call (forward or transpose)."""
+    if eqn.primitive.name not in _SCATTER_PRIMS:
+        return False
+    upd = tuple(getattr(eqn.invars[-1].aval, "shape", ()))
+    return bool(upd) and upd[0] == num_edges
+
+
+def count_segment_scatters(closed_jaxpr, plan: CSCPlan) -> int:
+    """Number of scatter equations whose updates carry the plan's edge
+    axis — the signature of a reference ``jax.ops.segment_*`` call (its
+    transpose/forward scatters (E, ...) updates into segment rows).
+
+    On model-level jaxprs this can't distinguish a Sum-stage fallback
+    from the legitimate NN-Gather transpose (both scatter edge-axis
+    cotangents onto nodes), so the end-to-end certificate compares the
+    count across backends (csc strictly below reference) while the
+    combine-level certificate (:func:`assert_sum_stage_fused`) demands
+    zero.
+    """
+    return sum(_is_segment_scatter(eqn, plan.num_edges)
+               for eqn in jaxpr_eqns(closed_jaxpr,
+                                     skip_pallas_bodies=True))
+
+
+def assert_sum_stage_fused(closed_jaxpr, plan: CSCPlan):
+    """The full Sum-stage contract on the csc path, forward AND backward:
+
+    1. pre-gather-free — no ``(nb, L_pad, ...)`` float tensor anywhere
+       (:func:`assert_pregather_free`);
+    2. no reference segment scatter — no scatter primitive whose updates
+       carry the edge axis (the forward fallback's ``.at[ids].add/max``
+       and the softmax recompute's segment passes);
+    3. no reference backward gather — no gather primitive mapping the
+       segment axis onto the edge axis outside the kernels (the old
+       ``g[segment_ids]`` backward); the fused backward reads cotangents
+       through the kernels' on-chip gather from the scalar-prefetched
+       ``edge_dst`` plan instead.
+
+    Apply to ``jax.value_and_grad`` jaxprs of combine-level losses: there
+    the only segment-shaped traffic *is* the Sum stage, so the assertion
+    is exact. (Model-level jaxprs legitimately gather/scatter the edge
+    axis in NN-Gather — use :func:`count_segment_scatters` across
+    backends there, plus the pre-gather walk which stays exact.)
+    """
+    assert_pregather_free(closed_jaxpr, plan)
+    E, N = plan.num_edges, plan.num_segments
+    # the kernels' own on-chip gathers are block-shaped and legitimate —
+    # skip pallas bodies so they can't collide (e.g. when E == block_e)
+    for eqn in jaxpr_eqns(closed_jaxpr, skip_pallas_bodies=True):
+        name = eqn.primitive.name
+        if name in _SCATTER_PRIMS:
+            assert not _is_segment_scatter(eqn, E), (
+                f"reference segment scatter ({name}) found on the csc "
+                f"path (E={E})")
+        elif name == "gather":
+            src = tuple(getattr(eqn.invars[0].aval, "shape", ()))
+            out = tuple(getattr(eqn.outvars[0].aval, "shape", ()))
+            assert not (out and src and out[0] == E and src[0] == N), (
+                f"reference backward gather ({src} -> {out}) found on "
+                f"the csc path (E={E}, N={N})")
 
 
 # ---------------------------------------------------------------------------
@@ -265,11 +411,21 @@ def _edge_softmax_planned(logits, values, gather_idx, local_ids,
                           interpret: bool):
     from repro.kernels.edge_softmax import edge_softmax_csc
     # raw (E, H) / (E, H, D) operands go straight to the fused-gather
-    # kernel; heads run on the kernel grid in a single launch
-    out = edge_softmax_csc(logits, values, gather_idx, local_ids,
-                           gather_idx.shape[0], block_n, block_e,
-                           interpret=interpret)
-    return out[:num_segments]
+    # kernel; heads run on the kernel grid in a single launch. The
+    # launch also yields the per-destination softmax stats (m, den) the
+    # recompute-in-kernel backward rebuilds p_e from.
+    out, m, den = edge_softmax_csc(logits, values, gather_idx, local_ids,
+                                   gather_idx.shape[0], block_n, block_e,
+                                   interpret=interpret)
+    return out[:num_segments], m[:num_segments], den[:num_segments]
+
+
+def _lift_single_head(logits, values):
+    if logits.ndim == 1:
+        return logits[:, None], values[:, None, :], True
+    assert logits.ndim == 2 and values.ndim == 3, (logits.shape,
+                                                   values.shape)
+    return logits, values, False
 
 
 def edge_softmax_op(logits: jax.Array, values: jax.Array, plan: CSCPlan,
@@ -282,16 +438,58 @@ def edge_softmax_op(logits: jax.Array, values: jax.Array, plan: CSCPlan,
     destination ids, not the head) and run as one kernel launch with the
     head axis on the grid.
     """
+    out, _, _ = edge_softmax_fwd_op(logits, values, plan, interpret)
+    return out
+
+
+def edge_softmax_fwd_op(logits: jax.Array, values: jax.Array,
+                        plan: CSCPlan, interpret: bool = True):
+    """:func:`edge_softmax_op` plus the kernel's per-destination softmax
+    stats: returns (out, m (num_segments, H), den (num_segments, H)) —
+    the residuals the fused backward needs to rebuild p_e in-kernel."""
     assert logits.shape[0] == plan.num_edges
     g_idx = jnp.asarray(plan.gather_idx)
     l_ids = jnp.asarray(plan.local_ids)
-    if logits.ndim == 1:
-        out = _edge_softmax_planned(
-            logits[:, None], values[:, None, :], g_idx, l_ids,
-            plan.num_segments, plan.block_n, plan.block_e, interpret)
-        return out[:, 0, :]
-    assert logits.ndim == 2 and values.ndim == 3, (logits.shape,
-                                                   values.shape)
-    return _edge_softmax_planned(
-        logits, values, g_idx, l_ids, plan.num_segments, plan.block_n,
+    lg, vals, single = _lift_single_head(logits, values)
+    out, m, den = _edge_softmax_planned(
+        lg, vals, g_idx, l_ids, plan.num_segments, plan.block_n,
         plan.block_e, interpret)
+    if single:
+        return out[:, 0, :], m, den
+    return out, m, den
+
+
+@functools.partial(jax.jit, static_argnames=("num_edges", "block_e",
+                                             "interpret"))
+def _edge_softmax_bwd_planned(g, logits, values, m, den, og, edge_dst,
+                              num_edges: int, block_e: int,
+                              interpret: bool):
+    return edge_softmax_bwd_csc(g, logits, values, m, den, og, edge_dst,
+                                num_edges, block_e, interpret=interpret)
+
+
+def edge_softmax_bwd_op(g: jax.Array, logits: jax.Array, values: jax.Array,
+                        out: jax.Array, m: jax.Array, den: jax.Array,
+                        plan: CSCPlan, interpret: bool = True):
+    """Backward of :func:`edge_softmax_op` — the recompute-in-kernel pass.
+
+    g / out (num_segments, H, D) cotangent and saved forward output;
+    logits / values the saved forward operands; m / den the forward
+    launch's softmax stats. Returns (d_logits, d_values) from one launch
+    with heads on the grid; the edge probabilities are rebuilt inside the
+    kernel (never an (E, H) tensor in HBM) and no reference segment pass
+    runs.
+    """
+    assert logits.shape[0] == plan.num_edges
+    lg, vals, single = _lift_single_head(logits, values)
+    if single:
+        g, out = g[:, None, :], out[:, None, :]
+    # og_i = out_i . g_i: the node-proportional contraction of d_logit
+    # (elementwise jnp, no segment op, no edge-axis materialization)
+    og = jnp.sum(out.astype(jnp.float32) * g.astype(jnp.float32), axis=-1)
+    d_logits, d_values = _edge_softmax_bwd_planned(
+        g, lg, vals, m, den, og, jnp.asarray(plan.edge_dst),
+        plan.num_edges, plan.block_e, interpret)
+    if single:
+        return d_logits[:, 0], d_values[:, 0, :]
+    return d_logits, d_values

@@ -56,6 +56,31 @@ VMEM on real hardware the messages move to ``pltpu.ANY``/HBM with
 per-chunk DMA (same kernel structure); interpret mode (this container)
 validates the arithmetic either way.
 
+Backward geometry (kernels in backward.py)
+------------------------------------------
+The backward kernels run over the **edge axis** (grid ``(d_tiles,
+E_pad/BE)``; softmax: ``(H, E_pad/BE)``) with the node-indexed arrays
+resident, per grid step in f32:
+
+=====================  =======================  =========================
+buffer                 shape                    bytes (defaults)
+=====================  =======================  =========================
+edge_dst (SMEM)        (E_pad,) int32           4·E_pad
+cotangent g (resident) (N, BD) / (N, 1, D)      4·N·BD
+fwd out / stats        (N, BD) (max) or         4·N·BD / 3·4·N
+                       3×(N, 1) (softmax)
+edge tiles             (BE, BD) in + out        2·4·BE·BD
+=====================  =======================  =========================
+
+No ``(BE, BN, BD)`` candidate expansion exists in any backward kernel
+(the gather direction needs no one-hot), so the backward d-tile cap is
+looser (**128**) than the forward max kernel's 64; the binding line is
+the 4·N·D cotangent residency, which moves to HBM + per-chunk DMA at the
+same threshold as the forward's message residency. The softmax backward
+additionally keeps the per-edge probability entirely in registers/VMEM —
+it is rebuilt per tile from the saved logits and the forward-emitted
+(m, den) stats, never written to HBM.
+
 Host-side planning (``build_csc_plan`` in ops.py) computes the padded
 edge-slice layout once per graph — the paper's "reused CSR/CSC indexing"
 (§4.2): views/batches reuse the plan, only messages change.

@@ -1,19 +1,23 @@
 """jax.grad parity of the fused-gather CSC kernels vs the reference
-backend, plus the fused-path memory contract (no (nb, L_pad, D)
-pre-gather tensor in the jaxpr) and the mini-batch empty-labeled guard.
+backend, plus the fused-path memory contracts:
 
-Covers what ISSUE 2 names: multi-head messages, empty segments, masked
-edges, and D > 64 (the d-tiled segment-max grid axis), for every combine
-mode the kernels accelerate."""
+- no (nb, L_pad, D) pre-gather tensor in the jaxpr (forward AND backward)
+- no reference segment scatter / g[segment_ids] backward gather on the
+  csc path (the fused backward kernels of kernels/backward.py), asserted
+  via ``assert_sum_stage_fused`` on value_and_grad jaxprs
+
+Covers multi-head messages, empty segments, masked edges, and D > 64
+(the d-tiled grid axes), for every combine mode the kernels accelerate."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.aggregate import combine
-from repro.kernels.ops import (assert_pregather_free, build_csc_plan,
-                               edge_softmax_op, segment_max_op,
-                               segment_sum_op)
+from repro.kernels.ops import (assert_pregather_free,
+                               assert_sum_stage_fused, build_csc_plan,
+                               count_segment_scatters, edge_softmax_op,
+                               segment_max_op, segment_sum_op)
 
 KERNEL_MODES = ["sum", "max", "softmax"]
 
@@ -109,6 +113,112 @@ def test_grad_jaxpr_has_no_pregather_tensor():
         jaxpr = jax.make_jaxpr(jax.grad(loss, argnums=(0, 1)))(
             msg["value"], msg["logit"])
         assert_pregather_free(jaxpr, plan)
+
+
+@pytest.mark.parametrize("mode", KERNEL_MODES + ["mean"])
+@pytest.mark.parametrize("H,D", [(2, 8), (2, 80)])
+def test_value_and_grad_jaxpr_backward_contract(mode, H, D):
+    """The full fused contract of the tentpole: the value_and_grad jaxpr
+    of the csc combine path contains no (nb, L_pad, ...) float tensor, no
+    reference segment scatter, and no g[segment_ids] backward gather —
+    the backward runs through the Pallas kernels, not reference math.
+    (2, 80) folds to lane width 160 > the d-tile caps of both the
+    forward max and the backward gather kernels."""
+    msg, dst, ids_np, mask = _problem(seed=13 + H + D, H=H, D=D)
+    N = 90
+    plan = build_csc_plan(ids_np, N, block_n=32, block_e=64)
+
+    def loss(value, logit):
+        out = combine(mode, {"value": value, "logit": logit}, dst, N,
+                      mask, backend="csc", plan=plan)
+        return jnp.sum(jnp.sin(out) * out)
+
+    jaxpr = jax.make_jaxpr(jax.value_and_grad(loss, argnums=(0, 1)))(
+        msg["value"], msg["logit"])
+    assert_sum_stage_fused(jaxpr, plan)
+
+
+def test_backward_contract_ignores_in_kernel_gathers():
+    """Regression: when E == block_e the kernels' own on-chip block
+    gathers have edge-sized outputs; the contract must skip pallas
+    bodies rather than flag them as reference fallbacks."""
+    rng = np.random.default_rng(17)
+    E, N, H, D = 64, 32, 2, 8
+    ids = rng.integers(0, N, E).astype(np.int32)
+    dst = jnp.asarray(ids)
+    msg = {"value": jnp.asarray(rng.normal(size=(E, H, D)), jnp.float32),
+           "logit": jnp.asarray(rng.normal(size=(E, H)), jnp.float32)}
+    mask = jnp.ones(E, jnp.float32)
+    plan = build_csc_plan(ids, N, block_n=32, block_e=64)
+    assert plan.num_edges == plan.block_e
+
+    for mode in KERNEL_MODES:
+        def loss(value, logit):
+            out = combine(mode, {"value": value, "logit": logit}, dst, N,
+                          mask, backend="csc", plan=plan)
+            return jnp.sum(out * out)
+
+        jaxpr = jax.make_jaxpr(jax.value_and_grad(loss, argnums=(0, 1)))(
+            msg["value"], msg["logit"])
+        assert_sum_stage_fused(jaxpr, plan)
+
+
+def test_backward_contract_catches_reference_fallback():
+    """assert_sum_stage_fused must flag the reference path (which runs
+    segment scatters and, under grad, the g[segment_ids] gather)."""
+    msg, dst, ids_np, mask = _problem(seed=14, H=2, D=8)
+    N = 90
+    plan = build_csc_plan(ids_np, N, block_n=32, block_e=64)
+
+    def ref_loss(value, logit):
+        out = combine("sum", {"value": value, "logit": logit}, dst, N,
+                      mask, backend="reference")
+        return jnp.sum(out * out)
+
+    jaxpr = jax.make_jaxpr(jax.value_and_grad(ref_loss, argnums=(0,)))(
+        msg["value"], msg["logit"])
+    assert count_segment_scatters(jaxpr, plan) > 0
+    with pytest.raises(AssertionError, match="reference"):
+        assert_sum_stage_fused(jaxpr, plan)
+
+
+@pytest.mark.parametrize("model_name,heads", [("gcn", 1), ("gat", 2)])
+def test_model_value_and_grad_pregather_free_and_fewer_scatters(
+        model_name, heads):
+    """End-to-end train-step certificate: value_and_grad of the block
+    loss on the csc path stays pre-gather-free, and its segment-scatter
+    count sits strictly below the reference backend's (the only
+    remaining edge-axis scatters are the NN-Gather transposes, which
+    both backends share — the Sum-stage fallbacks are gone)."""
+    import dataclasses
+
+    from repro.config import GNNConfig
+    from repro.core.mpgnn import loss_block
+    from repro.core.strategies import global_batch_view
+    from repro.graph import sbm_graph
+    from repro.models import make_gnn
+
+    g = sbm_graph(num_nodes=150, num_classes=3, feature_dim=8,
+                  p_in=0.06, p_out=0.02, seed=3).add_self_loops()
+    cfg = GNNConfig(model=model_name, num_layers=2, hidden_dim=8,
+                    num_classes=3, feature_dim=8, num_heads=heads)
+    model_ref = make_gnn(cfg)
+    model_csc = dataclasses.replace(model_ref, aggregate_backend="csc")
+    params = model_ref.init(jax.random.PRNGKey(0), 8)
+    view = global_batch_view(g, 2)
+    gcn_norm = model_name == "gcn"
+    block_csc = view.as_block(gcn_norm=gcn_norm, csc_plan=True)
+    block_ref = view.as_block(gcn_norm=gcn_norm)
+    plan = block_csc.csc_plan
+
+    jaxpr_csc = jax.make_jaxpr(jax.value_and_grad(
+        lambda p: loss_block(model_csc, p, block_csc)))(params)
+    jaxpr_ref = jax.make_jaxpr(jax.value_and_grad(
+        lambda p: loss_block(model_ref, p, block_ref)))(params)
+    assert_pregather_free(jaxpr_csc, plan)
+    n_csc = count_segment_scatters(jaxpr_csc, plan)
+    n_ref = count_segment_scatters(jaxpr_ref, plan)
+    assert n_csc < n_ref, (n_csc, n_ref)
 
 
 def test_assert_pregather_free_catches_materialization():

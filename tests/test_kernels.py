@@ -266,3 +266,112 @@ def test_segment_max_d_tiled_wide_features():
     ref = jnp.maximum(jax.ops.segment_max(data, jnp.asarray(ids), N), NEG)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused backward kernels (kernels/backward.py) vs the reference bwd math
+# ---------------------------------------------------------------------------
+
+
+def test_plan_edge_dst_inverts_the_plan():
+    """The plan's inverse map: lane e of edge_dst is the destination row
+    of edge e (pad lanes hold num_segments), derived from
+    gather_idx/local_ids on the host."""
+    rng = np.random.default_rng(21)
+    E, N = 530, 140
+    ids = rng.integers(0, N, E).astype(np.int32)
+    plan = build_csc_plan(ids, N, block_n=32, block_e=64)
+    assert plan.edge_dst.shape[0] % plan.block_e == 0
+    np.testing.assert_array_equal(plan.edge_dst[:E], ids)
+    assert np.all(plan.edge_dst[E:] == N)
+
+
+@pytest.mark.parametrize("E,N,D,blocks", [(400, 90, 8, (32, 64)),
+                                          (777, 300, 48, (64, 128)),
+                                          (300, 64, 160, (16, 64))])
+def test_segment_sum_bwd_kernel(E, N, D, blocks):
+    """d_data[e] = g[dst[e]] via the plan-driven gather kernel (D=160
+    exercises the backward d-tiling)."""
+    from repro.kernels.ops import segment_sum_bwd_op
+    rng = np.random.default_rng(E + D)
+    ids = rng.integers(0, N, E).astype(np.int32)
+    g = jnp.asarray(rng.normal(size=(N, D)), jnp.float32)
+    plan = build_csc_plan(ids, N, block_n=blocks[0], block_e=blocks[1])
+    out = segment_sum_bwd_op(g, plan, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(g)[ids],
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_segment_max_bwd_kernel_hit_mask():
+    """The argmax-hit mask runs inside the kernel: cotangent lands only
+    on edges attaining their segment max (ties share, like
+    jax.ops.segment_max)."""
+    from repro.kernels.ops import (segment_max_bwd_op, segment_max_op)
+    rng = np.random.default_rng(31)
+    E, N, D = 450, 100, 12
+    ids = rng.integers(0, N // 2, E).astype(np.int32)   # empty tail
+    data = jnp.asarray(
+        rng.integers(-4, 4, size=(E, D)).astype(np.float32))  # force ties
+    g = jnp.asarray(rng.normal(size=(N, D)), jnp.float32)
+    plan = build_csc_plan(ids, N, block_n=32, block_e=64)
+    fwd = segment_max_op(data, plan, interpret=True)
+    out = segment_max_bwd_op(g, fwd, data, plan, interpret=True)
+    hit = (np.asarray(data) == np.asarray(fwd)[ids]).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(g)[ids] * hit,
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_edge_softmax_fwd_op_stats_match_reference():
+    """The forward launch's extra (m, den) outputs equal the reference
+    per-destination softmax stats the backward rebuilds p_e from."""
+    from repro.kernels.ops import edge_softmax_fwd_op
+    from repro.kernels.segment_sum import NEG
+    rng = np.random.default_rng(41)
+    E, N, H, D = 500, 120, 2, 16
+    ids = rng.integers(0, N // 2, E).astype(np.int32)
+    logits = jnp.asarray(rng.normal(size=(E, H)) * 3, jnp.float32)
+    vals = jnp.asarray(rng.normal(size=(E, H, D)), jnp.float32)
+    plan = build_csc_plan(ids, N, block_n=32, block_e=64)
+    _, m, den = edge_softmax_fwd_op(logits, vals, plan, interpret=True)
+    seg_max = jnp.maximum(
+        jax.ops.segment_max(logits, jnp.asarray(ids), N), NEG)
+    ex = jnp.exp(logits - seg_max[jnp.asarray(ids)])
+    den_ref = jax.ops.segment_sum(ex, jnp.asarray(ids), N)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(seg_max),
+                               rtol=1e-6, atol=1e-6)
+    # empty segments: kernel den is 0, reference sum is 0 too
+    np.testing.assert_allclose(np.asarray(den), np.asarray(den_ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("H,D", [(1, 8), (3, 16)])
+def test_edge_softmax_bwd_kernel_matches_reference(H, D):
+    """The recompute-in-kernel softmax backward == the reference-math
+    jacobian (kept in aggregate.reference_edge_softmax_bwd), including
+    masked edges nulled to NEG."""
+    from repro.core.aggregate import reference_edge_softmax_bwd
+    from repro.kernels.ops import edge_softmax_bwd_op, edge_softmax_fwd_op
+    from repro.kernels.segment_sum import NEG
+    rng = np.random.default_rng(51 + H)
+    E, N = 480, 110
+    ids = rng.integers(0, N // 2, E).astype(np.int32)
+    mask = rng.random(E) > 0.3
+    logits = np.where(mask[:, None], rng.normal(size=(E, H)) * 3,
+                      NEG).astype(np.float32)
+    vals = (rng.normal(size=(E, H, D)).astype(np.float32)
+            * mask[:, None, None])
+    g = jnp.asarray(rng.normal(size=(N, H, D)), jnp.float32)
+    plan = build_csc_plan(ids, N, block_n=32, block_e=64)
+    out, m, den = edge_softmax_fwd_op(jnp.asarray(logits),
+                                      jnp.asarray(vals), plan,
+                                      interpret=True)
+    d_logits, d_values = edge_softmax_bwd_op(
+        g, jnp.asarray(logits), jnp.asarray(vals), out, m, den, plan,
+        interpret=True)
+    ref_dl, ref_dv = reference_edge_softmax_bwd(
+        g, jnp.asarray(logits), jnp.asarray(vals), out, jnp.asarray(ids),
+        N)
+    np.testing.assert_allclose(np.asarray(d_logits), np.asarray(ref_dl),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(d_values), np.asarray(ref_dv),
+                               rtol=1e-5, atol=1e-6)
