@@ -19,7 +19,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import gnn_tables, gnn_scaling, kernels_bench, \
-        roofline_table
+        roofline_table, strategies_bench
 
     steps = 30 if args.fast else 60
     benches = {
@@ -35,6 +35,7 @@ def main(argv=None) -> int:
         "appB": lambda: gnn_scaling.appB_halo_ablation(steps),
         "kernels": kernels_bench.kernels,
         "aggregate": lambda: kernels_bench.aggregate(smoke=args.smoke),
+        "strategies": lambda: strategies_bench.strategies(smoke=args.smoke),
         "roofline": roofline_table.roofline_table,
     }
     only = set(args.only.split(",")) if args.only else None

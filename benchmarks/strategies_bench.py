@@ -1,0 +1,235 @@
+"""Strategy-Trainer benchmark (paper §2.3/§4.3 + DistDGL's host-bottleneck
+observation): steps/sec for global-, mini- and cluster-batch under each
+aggregation backend, comparing
+
+  * ``naive``            — the pre-Trainer loop: per-partition Python
+                           ``shard_view_loop`` + blocking ``device_put``
+                           rebuild every step (what the examples used to
+                           hand-roll),
+  * ``trainer``          — compiled-once Trainer, vectorized ``shard_view``,
+                           prefetch disabled,
+  * ``trainer_prefetch`` — the full double-buffered host pipeline.
+
+Writes ``BENCH_strategies.json``. ``--smoke`` is the CI lane: tiny shapes
+plus the Trainer contracts asserted — exactly one trace of the train step
+across N steps of *all three* strategies, and bit-exact parity of the
+vectorized ``shard_view`` with the per-partition loop.
+
+Standalone (sets fake host devices before importing jax):
+
+    PYTHONPATH=src python -m benchmarks.strategies_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _run_naive(engine, step_fn, opt, views, steps: int):
+    """The per-step rebuild baseline: loop shard_view + blocking staging.
+
+    This reproduces the hand-rolled loop the repo shipped before the
+    Trainer (examples + ``launch/train.py``): per-partition
+    ``shard_view_loop``, blocking ``device_put`` staging, and a per-step
+    ``float(loss)`` readback for logging — the sync that serializes host
+    view prep with device compute. ``step_fn`` is built (and warmed) once
+    per backend so the baseline is not charged for compiles.
+    """
+    import jax
+
+    from repro.core.strategies import shard_view_loop
+
+    model = engine.model
+    params = model.init(jax.random.PRNGKey(0), engine.sg.feature_dim)
+    opt_state = opt.init(params)
+    # warmup x2: the first step compiles for uncommitted params, the
+    # second for the committed/replicated params every later step sees
+    for _ in range(2):
+        params, opt_state, loss = step_fn(
+            params, opt_state, shard_view_loop(engine.plan, next(views)))
+    jax.block_until_ready(loss)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        view = next(views)
+        params, opt_state, loss = step_fn(params, opt_state,
+                                          shard_view_loop(engine.plan, view))
+        loss = float(loss)   # the old loops' per-step logging sync
+    return time.perf_counter() - t0
+
+
+def _run_trainer(trainer, views, steps: int, prefetch: bool):
+    trainer.reset(seed=0)
+    # warmup x2 (see _run_naive) — the trace count still certifies a
+    # single trace across every warmup + timed run of every strategy
+    trainer.fit(views, steps=2, prefetch=False)
+    t0 = time.perf_counter()
+    trainer.fit(views, steps=steps, prefetch=prefetch)
+    return time.perf_counter() - t0
+
+
+def strategies(smoke: bool = False, out_json: str = "BENCH_strategies.json",
+               P: int = 0, steps: int = 0):
+    import jax
+    import numpy as np
+
+    from benchmarks.common import emit
+    from repro.config import GNNConfig
+    from repro.core.clustering import label_propagation_clusters
+    from repro.core.engine import HybridParallelEngine
+    from repro.core.partition import build_partitions
+    from repro.core.strategies import (shard_view, shard_view_loop,
+                                       strategy_views)
+    from repro.core.trainer import Trainer
+    from repro.graph import sbm_graph
+    from repro.models import make_gnn
+    from repro.optim import adam
+
+    if smoke and out_json == "BENCH_strategies.json":
+        out_json = "BENCH_strategies_smoke.json"   # don't clobber nightly
+
+    # cap the worker group at the physical core count: fake host devices
+    # beyond that time-slice the all_to_all rendezvous and the bench
+    # measures scheduler noise instead of the pipeline
+    P = P or max(1, min(4, len(jax.devices()), os.cpu_count() or 1))
+    # hidden is kept small on purpose: host-side view preparation (khop
+    # BFS, cluster masks, shard_view, device_put) is what this bench
+    # isolates, and it is independent of the feature width
+    if smoke:
+        steps, nodes, hidden, repeats = steps or 3, 300, 16, 1
+    else:
+        steps, nodes, hidden, repeats = steps or 15, 800, 8, 9
+    g = sbm_graph(num_nodes=nodes, num_classes=4, feature_dim=hidden,
+                  p_in=0.02, p_out=0.002, seed=0).add_self_loops()
+    clusters = label_propagation_clusters(
+        g, max_cluster_size=max(64, nodes // 12), seed=0)
+    sg = build_partitions(g, P)
+    opt = adam(1e-2)
+
+    # large target batches / halos so host-side view construction is a
+    # realistic fraction of the step (the DistDGL regime this pipeline
+    # is for), not a rounding error behind the device math
+    def views_for(strategy, seed=0):
+        return strategy_views(g, strategy, K=2, seed=seed,
+                              batch_nodes=max(16, 3 * nodes // 8),
+                              clusters=clusters, halo_hops=2,
+                              clusters_per_batch=max(
+                                  1, (int(clusters.max()) + 1) // 4))
+
+    # -- contract lane (smoke): compiled-once + shard_view parity ------------
+    for strategy in ("global", "mini", "cluster"):
+        v = next(iter(views_for(strategy, seed=9)))
+        a, b = shard_view(sg.plan, v), shard_view_loop(sg.plan, v)
+        assert set(a) == set(b)
+        for k in a:
+            assert np.array_equal(a[k], b[k]), (
+                f"vectorized shard_view diverges from loop: "
+                f"{strategy}/{k}")
+    emit("strategies/contract_shard_view", 0.0, "vectorized==loop")
+
+    rows, summary = [], {}
+    for backend in ("reference", "csc"):
+        cfg = GNNConfig(model="gcn", num_layers=2, hidden_dim=hidden,
+                        num_classes=4, feature_dim=hidden,
+                        aggregate_backend=backend)
+        engine = HybridParallelEngine(make_gnn(cfg), sg)
+        trainer = Trainer(engine, opt, seed=0)
+        naive_step = engine.make_train_step(opt)
+        n_steps = steps
+        runners = {
+            "naive": lambda s: _run_naive(engine, naive_step, opt,
+                                          views_for(s), n_steps),
+            "trainer": lambda s: _run_trainer(trainer, views_for(s),
+                                              n_steps, prefetch=False),
+            "trainer_prefetch": lambda s: _run_trainer(
+                trainer, views_for(s), n_steps, prefetch=True),
+        }
+        order = list(runners)
+        for strategy in ("global", "mini", "cluster"):
+            # interleave the variants, rotating the order each repeat, and
+            # take the min wall per variant: slow machine drift (co-tenant
+            # CPU, allocator pressure) then hits every variant at every
+            # position instead of whichever happens to run last
+            walls = {v: float("inf") for v in runners}
+            for r in range(repeats):
+                for v in order[r % 3:] + order[:r % 3]:
+                    walls[v] = min(walls[v], runners[v](strategy))
+            for variant, wall in walls.items():
+                sps = n_steps / wall
+                emit(f"strategies/{strategy}_{backend}_{variant}",
+                     wall / n_steps * 1e6,
+                     f"steps_per_sec={sps:.2f};P={P};N={g.num_nodes};"
+                     f"E={g.num_edges}")
+                rows.append({
+                    "strategy": strategy, "backend": backend,
+                    "variant": variant, "P": P, "steps": n_steps,
+                    "steps_per_sec": round(sps, 3),
+                    "ms_per_step": round(wall / n_steps * 1e3, 3),
+                    "num_nodes": g.num_nodes, "num_edges": g.num_edges,
+                    "hidden_dim": hidden,
+                    "prefetch": variant == "trainer_prefetch",
+                    "interpret_mode": jax.default_backend() != "tpu",
+                })
+            key = f"{strategy}/{backend}"
+            summary[key] = {
+                "naive_wall_s": round(walls["naive"], 4),
+                "trainer_prefetch_wall_s": round(
+                    walls["trainer_prefetch"], 4),
+                "prefetch_speedup_vs_naive": round(
+                    walls["naive"] / walls["trainer_prefetch"], 3),
+                "prefetch_speedup_vs_no_prefetch": round(
+                    walls["trainer"] / walls["trainer_prefetch"], 3),
+            }
+        # compiled-once across ALL strategies on one engine — the Trainer
+        # contract the paper's flexible-strategy claim rides on
+        trainer.assert_compiled_once()
+        emit(f"strategies/contract_compiled_once_{backend}", 0.0,
+             f"traces={trainer.trace_counts['train_step']}")
+
+    naive_total = sum(v["naive_wall_s"] for v in summary.values())
+    prefetch_total = sum(v["trainer_prefetch_wall_s"]
+                         for v in summary.values())
+    payload = {
+        "bench": "strategies",
+        "mode": "smoke" if smoke else "full",
+        "rows": rows,
+        "summary": summary,
+        # headline: total wall over all strategy x backend cells — the
+        # per-cell margins for the cheap-host-prep cells sit near the
+        # 2-core box's timing noise, the aggregate does not
+        "naive_total_wall_s": round(naive_total, 4),
+        "trainer_prefetch_total_wall_s": round(prefetch_total, 4),
+        "prefetch_trainer_beats_naive": bool(prefetch_total < naive_total),
+        "prefetch_trainer_speedup_vs_naive_total": round(
+            naive_total / max(prefetch_total, 1e-9), 3),
+        "note": ("wall-clock on CPU is interpret-mode emulation for the "
+                 "csc backend (trajectory only); the compiled-once and "
+                 "shard_view-parity contracts are hard-asserted"),
+    }
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out_json}", flush=True)
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny shapes, Trainer contracts asserted")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="fake host devices (worker-group size)")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_strategies.json")
+    args = ap.parse_args(argv)
+    # must happen before jax is first imported
+    os.environ.setdefault(
+        "XLA_FLAGS",
+        f"--xla_force_host_platform_device_count={args.devices}")
+    strategies(smoke=args.smoke, out_json=args.out, steps=args.steps)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,6 +3,12 @@ a worker group (8 simulated workers here; 1,024 in the paper) jointly
 computes every batch of an edge-attributed power-law "Alipay-like" graph
 with the in-house GAT-E model, under all three training strategies.
 
+Since PR 4 the loop is the compiled-once :class:`repro.core.Trainer`:
+one jitted train step serves global-, mini- and cluster-batch alike while
+a background thread shards (vectorized ``shard_view``) and stages the next
+view — and ``assert_compiled_once()`` certifies that no strategy switch
+ever retraced it.
+
     PYTHONPATH=src python examples/distributed_training.py [--steps 200]
 """
 import os
@@ -12,16 +18,12 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import argparse
 import time
 
-import jax
-import numpy as np
-
 from repro.config import GNNConfig
 from repro.core.clustering import label_propagation_clusters
 from repro.core.engine import HybridParallelEngine
-from repro.core.mpgnn import accuracy_block
 from repro.core.partition import build_partitions, partition_stats
-from repro.core.strategies import (cluster_batch_views, global_batch_view,
-                                   mini_batch_views, shard_view)
+from repro.core.strategies import global_batch_view, strategy_views
+from repro.core.trainer import Trainer
 from repro.graph import make_dataset
 from repro.models import make_gnn
 from repro.optim import adam
@@ -37,6 +39,9 @@ def main():
     ap.add_argument("--backend", default="reference",
                     choices=["reference", "csc"],
                     help="Sum-stage aggregation backend")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable the host-side view prefetch pipeline")
+    ap.add_argument("--checkpoint-dir", default=None)
     args = ap.parse_args()
 
     g = make_dataset("alipay_like", num_nodes=args.nodes, seed=0)
@@ -54,42 +59,35 @@ def main():
                           gcn_norm=False)
     print("partition stats:", partition_stats(sg))
     engine = HybridParallelEngine(model, sg)
+    trainer = Trainer(engine, adam(5e-3), seed=0)
 
     clusters = label_propagation_clusters(
         g, max_cluster_size=max(200, g.num_nodes // 20), seed=0)
-    strategies = {
-        "global": iter(lambda: global_batch_view(g, 2), None),
-        "mini": mini_batch_views(g, 2, batch_nodes=g.num_nodes // 50,
-                                 seed=0),
-        "cluster": cluster_batch_views(
-            g, 2, clusters, clusters_per_batch=max(
-                1, (int(clusters.max()) + 1) // 20), halo_hops=1, seed=0),
-    }
+    eval_view = global_batch_view(g, 2)
 
     steps_per = max(1, args.steps // 3)
-    params = model.init(jax.random.PRNGKey(0), cfg.feature_dim)
-    opt = adam(5e-3)
-    opt_state = opt.init(params)
-    step_fn = engine.make_train_step(opt)
-    infer = engine.make_infer()
-
-    for name, views in strategies.items():
+    for name in ("global", "mini", "cluster"):
+        views = strategy_views(
+            g, name, K=2, seed=0, batch_nodes=g.num_nodes // 50,
+            clusters=clusters,
+            clusters_per_batch=max(1, (int(clusters.max()) + 1) // 20))
         t0 = time.perf_counter()
-        for i in range(steps_per):
-            view = next(views)
-            params, opt_state, loss = step_fn(params, opt_state,
-                                              shard_view(sg.plan, view))
+        out = trainer.fit(views, steps=steps_per,
+                          prefetch=not args.no_prefetch,
+                          checkpoint_every=steps_per if args.checkpoint_dir
+                          else 0,
+                          checkpoint_dir=args.checkpoint_dir)
         wall = time.perf_counter() - t0
-        # distributed inference through the same engine (paper §4.3)
-        logits = infer(params, {**shard_view(
-            sg.plan, global_batch_view(g, 2))})
-        preds = engine.gather_predictions(np.asarray(logits))
-        test = g.test_mask
-        acc = float((preds.argmax(-1)[test] == g.labels[test]).mean())
+        # distributed inference through the same engine (paper §4.3),
+        # compiled once and shared by every eval
+        acc = trainer.evaluate(eval_view)
         print(f"[{name:8s}] {steps_per} steps, {wall:.1f}s "
               f"({wall / steps_per * 1e3:.0f} ms/step), "
-              f"loss {float(loss):.4f}, test acc {acc:.4f}")
-    print("done: one engine, three strategies, unified train+infer.")
+              f"loss {out['losses'][-1]:.4f}, test acc {acc:.4f}")
+    trainer.assert_compiled_once()
+    print("done: one engine, three strategies, one compiled train step "
+          f"(traced {trainer.trace_counts['train_step']}x over "
+          f"{trainer.step_num} steps).")
 
 
 if __name__ == "__main__":

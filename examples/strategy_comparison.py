@@ -2,59 +2,54 @@
 global-, mini- and cluster-batch and compare accuracy / step cost / memory
 proxies (Tables 2-4 in miniature).
 
+Since PR 4 all three strategies run through one :class:`repro.core.Trainer`
+over a 4-worker hybrid-parallel engine: ``trainer.reset()`` between
+strategies keeps the compiled step, so the whole comparison — 3 strategies,
+eval included — traces the train step exactly once
+(``assert_compiled_once``).
+
     PYTHONPATH=src python examples/strategy_comparison.py
 """
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
 import time
 
-import jax
 import numpy as np
 
 from repro.config import GNNConfig
 from repro.core.clustering import label_propagation_clusters, modularity
-from repro.core.mpgnn import accuracy_block, loss_block
-from repro.core.strategies import (cluster_batch_views, global_batch_view,
-                                   mini_batch_views)
+from repro.core.engine import HybridParallelEngine
+from repro.core.partition import build_partitions
+from repro.core.strategies import global_batch_view, strategy_views
+from repro.core.trainer import Trainer
 from repro.graph import make_dataset
 from repro.models import make_gnn
 from repro.optim import adam
 
 
-def run(strategy: str, g, model, cfg, steps: int):
-    params = model.init(jax.random.PRNGKey(0), cfg.feature_dim)
-    opt = adam(1e-2)
-    state = opt.init(params)
-    if strategy == "global":
-        views = iter(lambda: global_batch_view(g, cfg.num_layers), None)
-    elif strategy == "mini":
-        views = mini_batch_views(g, cfg.num_layers, batch_nodes=64, seed=0)
-    else:
-        clusters = label_propagation_clusters(g, max_cluster_size=300,
-                                              iters=4, seed=0)
-        print(f"  [cluster] {clusters.max() + 1} communities, "
-              f"modularity {modularity(g, clusters):.3f}")
-        views = cluster_batch_views(g, cfg.num_layers, clusters,
-                                    clusters_per_batch=4, halo_hops=1,
-                                    seed=0)
+def _counting(views, peak):
+    """Record the peak active-node count as views stream by (runs inside
+    the prefetch thread, off the training critical path)."""
+    for v in views:
+        peak[0] = max(peak[0], v.active_counts()["active_nodes"])
+        yield v
 
-    @jax.jit
-    def step(params, state, block):
-        loss, grads = jax.value_and_grad(
-            lambda p: loss_block(model, p, block))(params)
-        params, state = opt.update(grads, state, params)
-        return params, state, loss
 
-    peak = 0
+def run(trainer, g, clusters, strategy: str, steps: int):
+    trainer.reset(seed=0)
+    views = strategy_views(g, strategy, K=2, seed=0, batch_nodes=64,
+                           clusters=clusters, clusters_per_batch=4)
+    peak = [0]
     t0 = time.perf_counter()
-    for _ in range(steps):
-        v = next(views)
-        peak = max(peak, v.active_counts()["active_nodes"])
-        params, state, loss = step(params, state, v.as_block())
+    trainer.fit(_counting(views, peak), steps=steps)
     wall = time.perf_counter() - t0
-    gb = global_batch_view(g, cfg.num_layers).as_block()
-    acc = float(accuracy_block(model, params, gb,
-                               mask=g.test_mask.astype(np.float32)))
-    return {"strategy": strategy, "acc": acc, "ms_per_step":
-            wall / steps * 1e3, "peak_active_nodes": peak}
+    acc = trainer.evaluate(global_batch_view(g, 2),
+                           mask=g.test_mask.astype(np.float32))
+    return {"strategy": strategy, "acc": acc,
+            "ms_per_step": wall / steps * 1e3,
+            "peak_active_nodes": peak[0]}
 
 
 def main():
@@ -63,12 +58,29 @@ def main():
                     feature_dim=g.node_features.shape[1])
     model = make_gnn(cfg)
     print(f"graph: {g.num_nodes} nodes, {g.num_edges} edges")
+
+    clusters = label_propagation_clusters(g, max_cluster_size=300, iters=4,
+                                          seed=0)
+    print(f"  [cluster] {clusters.max() + 1} communities, "
+          f"modularity {modularity(g, clusters):.3f}")
+
+    import jax
+    P = min(4, len(jax.devices()))
+    engine = HybridParallelEngine(model, build_partitions(g, P))
+    trainer = Trainer(engine, adam(1e-2), seed=0)
+    # warmup: pay the (single) trace+compile outside the timed windows so
+    # the first strategy's ms/step isn't charged for it
+    trainer.fit(strategy_views(g, "global", K=2), steps=2)
+
     print(f"{'strategy':10s} {'test_acc':>8s} {'ms/step':>8s} "
           f"{'peak_active':>11s}")
     for strategy in ("global", "mini", "cluster"):
-        r = run(strategy, g, model, cfg, steps=120)
+        r = run(trainer, g, clusters, strategy, steps=120)
         print(f"{r['strategy']:10s} {r['acc']:8.4f} "
               f"{r['ms_per_step']:8.1f} {r['peak_active_nodes']:11d}")
+    trainer.assert_compiled_once()
+    print(f"one compiled train step served all three strategies "
+          f"({trainer.trace_counts['train_step']} trace, P={P}).")
 
 
 if __name__ == "__main__":

@@ -13,10 +13,11 @@ from repro.core.partition import (
 )
 from repro.core.strategies import (
     GraphView, global_batch_view, mini_batch_views, cluster_batch_views,
-    shard_view,
+    shard_view, shard_view_loop, strategy_views,
 )
 from repro.core.subgraph import khop_subgraph_view, bfs_layers
 from repro.core.clustering import label_propagation_clusters, hash_clusters
 from repro.core.engine import HybridParallelEngine
+from repro.core.trainer import RetraceError, Trainer
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -325,15 +325,20 @@ class HybridParallelEngine:
 
         return run
 
-    def make_infer(self):
+    def make_infer(self, on_trace: Optional[Callable[[], None]] = None):
         specs_data = {k: P(self.axis) for k in self._device_data}
         specs_view = {k: P(self.axis)
                       for k in ("node_active", "edge_active", "loss_mask")}
 
         # jit the shard_map closure ONCE (like make_loss_and_grad): every
-        # call used to re-trace the whole distributed forward
+        # call used to re-trace the whole distributed forward.
+        # ``on_trace`` runs as a Python side effect of tracing only — the
+        # Trainer uses it as a compile counter (retrace = contract breach).
         @jax.jit
         def infer_jit(params, data, view):
+            if on_trace is not None:
+                on_trace()
+
             def shard_fn(params, data, view):
                 shard = self._local_shard(data, view)
                 logits = self._forward_local(params, shard)

@@ -130,6 +130,41 @@ def cluster_batch_views(g: Graph, K: int, clusters: np.ndarray,
         i += 1
 
 
+def strategy_views(g: Graph, strategy: str, K: int, seed: int = 0,
+                   steps: Optional[int] = None,
+                   batch_nodes: int = 0,
+                   clusters: Optional[np.ndarray] = None,
+                   clusters_per_batch: int = 0,
+                   halo_hops: int = 1) -> Iterator[GraphView]:
+    """One entry point for all three strategies (paper §2.3): returns the
+    GraphView iterator the Trainer / examples / benchmarks drive. The
+    ``cluster`` strategy computes label-propagation communities when
+    ``clusters`` is not supplied."""
+    if strategy == "global":
+        # the global view is static — yield the SAME object every step so
+        # consumers (Trainer) can recognize it and stage it once
+        view = global_batch_view(g, K)
+        it = iter(lambda: view, None)
+        if steps is None:
+            return it
+        import itertools
+        return itertools.islice(it, steps)
+    if strategy == "mini":
+        return mini_batch_views(g, K, batch_nodes=batch_nodes, seed=seed,
+                                steps=steps)
+    if strategy == "cluster":
+        if clusters is None:
+            from repro.core.clustering import label_propagation_clusters
+            clusters = label_propagation_clusters(
+                g, max_cluster_size=max(64, g.num_nodes // 20), seed=seed)
+        return cluster_batch_views(g, K, clusters,
+                                   clusters_per_batch=clusters_per_batch,
+                                   halo_hops=halo_hops, seed=seed,
+                                   steps=steps)
+    raise ValueError(f"unknown strategy {strategy!r} "
+                     "(expected global|mini|cluster)")
+
+
 # ---------------------------------------------------------------------------
 # sharding a view onto a partition plan (for the distributed engine)
 # ---------------------------------------------------------------------------
@@ -141,6 +176,43 @@ def shard_view(plan, view: GraphView) -> dict:
     Returns numpy arrays stacked over partitions, ready for device_put:
       node_active (P, K, n_m_pad), edge_active (P, K, e_pad),
       loss_mask (P, n_m_pad).
+
+    Fully vectorized: one ``np.take`` over the stacked ``plan.masters`` /
+    ``plan.edge_orig`` index arrays per mask, so the host cost per step is
+    O(1) Python regardless of P — this is the per-step hot path the
+    Trainer's prefetch thread runs (see :mod:`repro.core.trainer`).
+    """
+    P = plan.P
+    K = view.K
+    n_m_pad = plan.masters.shape[1]
+    e_pad = plan.src_local.shape[1]
+    loss = view.loss_mask[plan.masters] * plan.master_mask
+    if view.node_active is None:
+        node_active = np.broadcast_to(plan.master_mask[:, None, :],
+                                      (P, K, n_m_pad)).copy()
+    else:
+        # (K, P, n_m_pad) -> (P, K, n_m_pad)
+        node_active = (np.take(view.node_active, plan.masters, axis=1)
+                       .transpose(1, 0, 2)
+                       * plan.master_mask[:, None, :])
+    if view.edge_active is None:
+        edge_active = np.broadcast_to(plan.edge_mask[:, None, :],
+                                      (P, K, e_pad)).copy()
+    else:
+        edge_active = (np.take(view.edge_active, plan.edge_orig, axis=1)
+                       .transpose(1, 0, 2)
+                       * plan.edge_mask[:, None, :])
+    return {"node_active": np.ascontiguousarray(node_active, np.float32),
+            "edge_active": np.ascontiguousarray(edge_active, np.float32),
+            "loss_mask": np.ascontiguousarray(loss, np.float32)}
+
+
+def shard_view_loop(plan, view: GraphView) -> dict:
+    """Reference per-partition loop implementation of :func:`shard_view`.
+
+    Kept as the parity oracle (tests assert bit-exact agreement with the
+    vectorized path) and as the naive host-side baseline timed by
+    ``benchmarks/strategies_bench.py``.
     """
     P = plan.P
     K = view.K

@@ -1,0 +1,320 @@
+"""Compiled-once strategy Trainer with a host-side view prefetch pipeline.
+
+The paper's training strategies (global-, mini-, cluster-batch, §2.3/§4.3)
+all reduce to streams of :class:`GraphView` masks over one partitioned
+graph, so a single jitted train step — whose shapes are fixed by the
+:class:`PartitionPlan`, not by the view — serves every strategy. At scale
+the bottleneck is not the device math but the host-side batch preparation
+(DistDGL's observation); the Trainer attacks it on three fronts:
+
+1. **Vectorized sharding** — views are mapped onto the plan with the
+   ``np.take``-based :func:`repro.core.strategies.shard_view` (O(1) Python
+   per step instead of a per-partition loop).
+2. **Double-buffered prefetch** — a daemon thread builds and
+   ``device_put``\\ s the view arrays for step *i+1* while step *i* runs on
+   the devices, so host work and device compute overlap.
+3. **Compiled-once contract** — the jitted step donates its view buffers
+   and carries a compile counter; :meth:`Trainer.assert_compiled_once`
+   turns a silent retrace (a 10x regression in disguise) into a hard
+   failure. CI asserts it across all three strategies
+   (``benchmarks/strategies_bench.py --smoke``).
+
+Periodic evaluation runs through the engine's (equally compiled-once)
+distributed ``infer``; checkpoints go through
+:mod:`repro.checkpoint.store` and restores resume mid-stream without
+triggering a retrace.
+
+Usage::
+
+    engine = HybridParallelEngine(model, build_partitions(g, P))
+    trainer = Trainer(engine, adam(1e-2), seed=0)
+    trainer.fit(strategy_views(g, "cluster", K=2), steps=200,
+                eval_every=50, eval_view=global_batch_view(g, 2))
+    trainer.assert_compiled_once()
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+from typing import Any, Iterable, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.core.strategies import GraphView, shard_view
+
+
+class RetraceError(AssertionError):
+    """The compiled-once contract was broken (or never exercised)."""
+
+
+class _ViewPrefetcher:
+    """Double-buffered host pipeline.
+
+    A daemon thread pulls GraphViews from the iterator, runs ``prepare``
+    (vectorized ``shard_view`` + ``device_put``) and parks up to ``depth``
+    staged views in a bounded queue, so staging for step *i+1* overlaps
+    device compute for step *i*. Exceptions in the thread re-raise in the
+    consumer; exhaustion is signalled with a sentinel.
+    """
+
+    _END = object()
+
+    def __init__(self, views: Iterable[GraphView], prepare, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
+        self._err: Optional[BaseException] = None
+        self._cancel = threading.Event()
+        self._thread = threading.Thread(
+            target=self._run, args=(views, prepare), daemon=True,
+            name="view-prefetch")
+        self._thread.start()
+
+    def _put(self, item) -> bool:
+        """Bounded put that gives up when the consumer cancelled (so an
+        abandoned fit can't leave the thread pinning staged buffers)."""
+        while not self._cancel.is_set():
+            try:
+                self._q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _run(self, views, prepare):
+        try:
+            for v in views:
+                if self._cancel.is_set() or not self._put(prepare(v)):
+                    return
+        except BaseException as e:  # noqa: BLE001 — surfaced in __next__
+            self._err = e
+        finally:
+            self._put(self._END)
+
+    def close(self):
+        """Unblock and retire the producer thread; staged-but-unconsumed
+        views are dropped."""
+        self._cancel.set()
+        while True:   # drain so a blocked _put wakes immediately
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5)
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._END:
+            self._thread.join()
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+
+class Trainer:
+    """Drives any GraphView iterator through a :class:`HybridParallelEngine`
+    with one shape-stable, compiled-once train step.
+
+    The step's shapes are fixed by the partition plan — ``(P, K, n_m_pad)``
+    node masks, ``(P, K, e_pad)`` edge masks — so global-, mini- and
+    cluster-batch views all hit the same executable. View buffers are
+    donated to XLA (every step stages a fresh view, so the device-side
+    mask buffers are reused in place). ``trace_counts`` records how often
+    the step (and the eval ``infer``) were actually traced.
+    """
+
+    def __init__(self, engine, opt, params: Optional[Any] = None,
+                 seed: int = 0, prefetch_depth: int = 2):
+        self.engine = engine
+        self.opt = opt
+        self.plan = engine.plan
+        if params is None:
+            params = engine.model.init(jax.random.PRNGKey(seed),
+                                       engine.sg.feature_dim)
+        self.params = params
+        self.opt_state = opt.init(params)
+        self.step_num = 0
+        self.history: list = []
+        self.prefetch_depth = prefetch_depth
+        self.trace_counts = {"train_step": 0, "infer": 0}
+
+        lg = engine.make_loss_and_grad()
+
+        def _step(params, opt_state, data, view):
+            # runs only while tracing — this is the compile counter the
+            # compiled-once contract is certified against
+            self.trace_counts["train_step"] += 1
+            loss, grads = lg(params, data, view)
+            new_params, new_state = opt.update(grads, opt_state, params)
+            return new_params, new_state, loss
+
+        # view buffers are donated so XLA reuses the device-side mask
+        # buffers in place step over step (donation is a no-op warning on
+        # the CPU backend, so only ask for it where it exists)
+        self._donate_views = jax.default_backend() != "cpu"
+        donate = (3,) if self._donate_views else ()
+        self._step = jax.jit(_step, donate_argnums=donate)
+        self._infer = engine.make_infer(on_trace=self._count_infer_trace)
+        # single-slot (view, staged-arrays) cache; holding the view object
+        # itself both bounds the cache and keeps the identity check sound
+        # (an id() key could be reused by a garbage-collected view)
+        self._eval_cache: Optional[tuple] = None
+
+    def _count_infer_trace(self):
+        self.trace_counts["infer"] += 1
+
+    # -- the training loop ----------------------------------------------------
+
+    def fit(self, views: Iterable[GraphView], steps: Optional[int] = None,
+            prefetch: bool = True, eval_every: int = 0,
+            eval_view: Optional[GraphView] = None,
+            eval_mask: Optional[np.ndarray] = None,
+            checkpoint_every: int = 0,
+            checkpoint_dir: Optional[str] = None,
+            max_in_flight: int = 2,
+            log_every: int = 0, log=print) -> dict:
+        """Run ``steps`` views (all of ``views`` if None) through the
+        compiled step. Returns ``{"losses", "evals", "steps"}``; losses
+        are synced once at the end so per-step host/device overlap is
+        never serialized by a blocking ``float()``.
+
+        ``max_in_flight`` bounds the async-dispatch run-ahead: before
+        dispatching step *i* the loop blocks on step *i - max_in_flight*,
+        so at most that many steps' view/activation buffers are live at
+        once — deep run-ahead piles up device memory and (on CPU) slows
+        the executor more than the overlap buys.
+        """
+        if steps is not None:
+            views = itertools.islice(views, steps)
+        stage = lambda v: self.engine.stage_view(  # noqa: E731
+            shard_view(self.plan, v))
+        if self._donate_views:
+            # donated buffers are consumed by the step — always restage
+            prepare = stage
+        else:
+            # static streams (global batch yields one GraphView object)
+            # are staged exactly once and the device buffers reused; the
+            # cache holds the view itself so the identity check can't be
+            # fooled by a freed view's id being reused
+            cache = {"view": None, "staged": None}
+
+            def prepare(v):
+                if cache["view"] is not v:
+                    cache["view"], cache["staged"] = v, stage(v)
+                return cache["staged"]
+
+        staged_iter = (_ViewPrefetcher(views, prepare, self.prefetch_depth)
+                       if prefetch else (prepare(v) for v in views))
+
+        data = self.engine._device_data
+        losses, pending, evals = [], [], []
+        try:
+            for staged in staged_iter:
+                if max_in_flight > 0 and len(pending) >= max_in_flight:
+                    # backpressure: wait on the oldest in-flight step (one
+                    # scalar readiness wait, not a pipeline-wide sync) and
+                    # retire its loss to a host float so live device
+                    # arrays stay O(max_in_flight), not O(steps)
+                    losses.append(float(pending.pop(0)))
+                self.params, self.opt_state, loss = self._step(
+                    self.params, self.opt_state, data, staged)
+                self.step_num += 1
+                pending.append(loss)
+                if (eval_every and eval_view is not None
+                        and self.step_num % eval_every == 0):
+                    rec = {"step": self.step_num, "loss": float(loss),
+                           "eval_acc": self.evaluate(eval_view, eval_mask)}
+                    evals.append(rec)
+                    if log_every:
+                        log(f"step {rec['step']:5d}  "
+                            f"loss {rec['loss']:.4f}  "
+                            f"eval_acc {rec['eval_acc']:.4f}")
+                if (checkpoint_every and checkpoint_dir
+                        and self.step_num % checkpoint_every == 0):
+                    self.save(checkpoint_dir)
+        finally:
+            if isinstance(staged_iter, _ViewPrefetcher):
+                staged_iter.close()
+        losses.extend(float(l) for l in pending)
+        self.history.extend(evals)
+        return {"losses": losses, "evals": evals, "steps": self.step_num}
+
+    # -- eval / infer -----------------------------------------------------------
+
+    def evaluate(self, view: GraphView,
+                 mask: Optional[np.ndarray] = None) -> float:
+        """Distributed inference over ``view`` (compiled once, shared with
+        every later eval); accuracy on ``mask`` (default: the graph's test
+        mask, falling back to the view's loss mask)."""
+        if self._eval_cache is None or self._eval_cache[0] is not view:
+            self._eval_cache = (view, shard_view(self.plan, view))
+        logits = self._infer(self.params, dict(self._eval_cache[1]))
+        preds = self.engine.gather_predictions(np.asarray(logits)).argmax(-1)
+        g = view.graph
+        if mask is None:
+            mask = (g.test_mask if g.test_mask is not None
+                    else view.loss_mask > 0)
+        mask = np.asarray(mask) > 0
+        if not mask.any():
+            return 0.0
+        return float((preds[mask] == g.labels[mask]).mean())
+
+    # -- checkpointing ---------------------------------------------------------
+
+    def save(self, directory: str) -> str:
+        return save_checkpoint(directory, self.step_num, {
+            "params": self.params,
+            "opt_state": self.opt_state,
+            "step": np.asarray(self.step_num, np.int64),
+        })
+
+    def restore(self, directory: str, step: Optional[int] = None) -> int:
+        """Load params/opt state/step from a checkpoint. The restored
+        leaves match the compiled step's signature, so resuming does not
+        retrace. Returns the restored step so the caller can fast-forward
+        its view iterator (view streams are host-side state)."""
+        ck = load_checkpoint(directory, step)
+        self.params = ck["params"]
+        self.opt_state = ck["opt_state"]
+        self.step_num = int(ck["step"])
+        return self.step_num
+
+    # -- contracts / lifecycle ---------------------------------------------------
+
+    def reset(self, params: Optional[Any] = None, seed: int = 0):
+        """Fresh params/opt state **keeping the compiled step**, so one
+        compile serves many runs (strategy comparisons reset between
+        strategies and still certify compiled-once)."""
+        if params is None:
+            params = self.engine.model.init(jax.random.PRNGKey(seed),
+                                            self.engine.sg.feature_dim)
+        self.params = params
+        self.opt_state = self.opt.init(params)
+        self.step_num = 0
+        self.history = []
+        self._eval_cache = None
+
+    def assert_compiled_once(self):
+        """The trace-count contract: after any number of steps across any
+        mix of strategies, the train step must have been traced exactly
+        once (and the eval infer at most once). A retrace is a silent
+        ~10x slowdown — fail loudly instead."""
+        n = self.trace_counts["train_step"]
+        if n == 0:
+            raise RetraceError(
+                "assert_compiled_once: the train step never ran — call "
+                "fit() before asserting the contract")
+        if n != 1:
+            raise RetraceError(
+                f"train step was traced {n} times (expected exactly 1): "
+                "some input changed shape/dtype between steps — view "
+                "arrays must come from shard_view over one PartitionPlan")
+        if self.trace_counts["infer"] > 1:
+            raise RetraceError(
+                f"eval infer was traced {self.trace_counts['infer']} "
+                "times (expected at most 1)")

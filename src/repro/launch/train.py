@@ -40,8 +40,7 @@ def train_gnn(dataset: str, model_name: str, strategy: str, steps: int,
     from repro.graph import make_dataset
     from repro.models import make_gnn
     from repro.core.mpgnn import loss_block, accuracy_block
-    from repro.core.strategies import (global_batch_view, mini_batch_views,
-                                       cluster_batch_views, shard_view)
+    from repro.core.strategies import global_batch_view, strategy_views
     from repro.core.clustering import label_propagation_clusters
     from repro.optim import adam
 
@@ -60,39 +59,58 @@ def train_gnn(dataset: str, model_name: str, strategy: str, steps: int,
     model = make_gnn(cfg)
     params = model.init(jax.random.PRNGKey(seed), cfg.feature_dim)
     opt = adam(lr, weight_decay=5e-4)
-    opt_state = opt.init(params)
 
-    # views per strategy
-    if strategy == "global":
-        views = iter(lambda: global_batch_view(g, cfg.num_layers), None)
-    elif strategy == "mini":
-        # 10% of labeled nodes per step (the paper's 1% suits graphs with
-        # ~100k+ labeled nodes; tiny synthetics need larger batches)
-        labeled = int((g.train_mask if g.train_mask is not None
-                       else np.ones(g.num_nodes, bool)).sum())
-        views = mini_batch_views(g, cfg.num_layers,
-                                 batch_nodes=max(32, labeled // 10),
-                                 seed=seed)
-    elif strategy == "cluster":
+    # views per strategy, through the shared strategy_views entry point.
+    # mini: 10% of labeled nodes per step (the paper's 1% suits graphs
+    # with ~100k+ labeled nodes; tiny synthetics need larger batches)
+    labeled = int((g.train_mask if g.train_mask is not None
+                   else np.ones(g.num_nodes, bool)).sum())
+    clusters = None
+    if strategy == "cluster":
         clusters = label_propagation_clusters(
             g, max_cluster_size=max(64, g.num_nodes // 50), seed=seed)
-        views = cluster_batch_views(g, cfg.num_layers, clusters,
-                                    clusters_per_batch=max(
-                                        1, (clusters.max() + 1) // 20),
-                                    seed=seed)
-    else:
-        raise ValueError(strategy)
-
-    engine = None
-    if use_engine:
-        from repro.core.partition import build_partitions
-        from repro.core.engine import HybridParallelEngine
-        sg = build_partitions(g, use_engine, method=partition_method,
-                              gcn_norm=(model_name == "gcn"))
-        engine = HybridParallelEngine(model, sg)
-        step_fn = engine.make_train_step(opt)
+    views = strategy_views(
+        g, strategy, cfg.num_layers, seed=seed,
+        batch_nodes=max(32, labeled // 10), clusters=clusters,
+        clusters_per_batch=max(1, (int(clusters.max()) + 1) // 20)
+        if clusters is not None else 0,
+        halo_hops=0)
 
     gcn_norm = model_name == "gcn"
+    test_mask = (g.test_mask if g.test_mask is not None else g.train_mask)
+
+    if use_engine:
+        # distributed path: the compiled-once Trainer drives the engine
+        # (vectorized shard_view + prefetch pipeline + eval through the
+        # engine's distributed infer)
+        from repro.core.partition import build_partitions
+        from repro.core.engine import HybridParallelEngine
+        from repro.core.trainer import Trainer
+        sg = build_partitions(g, use_engine, method=partition_method,
+                              gcn_norm=gcn_norm)
+        engine = HybridParallelEngine(model, sg)
+        trainer = Trainer(engine, opt, params=params)
+        gbv = global_batch_view(g, cfg.num_layers)
+        mask = test_mask.astype(np.float32)
+        t0 = time.perf_counter()
+        out = trainer.fit(views, steps=steps, eval_every=eval_every,
+                          eval_view=gbv, eval_mask=mask,
+                          log_every=1, log=log.info)
+        wall = time.perf_counter() - t0
+        trainer.assert_compiled_once()
+        history = [{"step": e["step"], "loss": e["loss"],
+                    "test_acc": e["eval_acc"]} for e in out["evals"]]
+        if history and history[-1]["step"] == steps:
+            final_acc = history[-1]["test_acc"]   # fit already evaluated
+        else:
+            final_acc = trainer.evaluate(gbv, mask)
+            history.append({"step": steps, "loss": out["losses"][-1],
+                            "test_acc": final_acc})
+        return {"history": history, "wall_s": wall,
+                "params": trainer.params, "final_acc": final_acc,
+                "model": model, "graph": g}
+
+    opt_state = opt.init(params)
 
     @jax.jit
     def local_step(params, opt_state, block):
@@ -105,18 +123,11 @@ def train_gnn(dataset: str, model_name: str, strategy: str, steps: int,
     t0 = time.perf_counter()
     for step in range(steps):
         view = next(views)
-        if engine is not None:
-            params, opt_state, loss = step_fn(params, opt_state,
-                                              shard_view(sg.plan, view))
-            loss = float(loss)
-        else:
-            block = view.as_block(gcn_norm=gcn_norm,
-                                  csc_plan=cfg.aggregate_backend == "csc")
-            params, opt_state, loss_v = local_step(params, opt_state, block)
-            loss = float(loss_v)
+        block = view.as_block(gcn_norm=gcn_norm,
+                              csc_plan=cfg.aggregate_backend == "csc")
+        params, opt_state, loss_v = local_step(params, opt_state, block)
+        loss = float(loss_v)
         if step % eval_every == 0 or step == steps - 1:
-            test_mask = (g.test_mask if g.test_mask is not None
-                         else g.train_mask)
             gb = global_batch_view(g, cfg.num_layers).as_block(
                 gcn_norm=gcn_norm,
                 csc_plan=cfg.aggregate_backend == "csc")
