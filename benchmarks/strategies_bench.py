@@ -10,10 +10,19 @@ aggregation backend, comparing
                            prefetch disabled,
   * ``trainer_prefetch`` — the full double-buffered host pipeline.
 
+A ``view_build`` section times host-side view construction itself
+(views/sec): the per-node Python BFS loop vs the vectorized CSR-segment
+expansion vs the buffer-reusing ViewBuilder for mini-batch views, and the
+per-step ``np.isin``+halo recompute vs the precomputed ClusterViewCache
+for cluster views.
+
 Writes ``BENCH_strategies.json``. ``--smoke`` is the CI lane: tiny shapes
-plus the Trainer contracts asserted — exactly one trace of the train step
-across N steps of *all three* strategies, and bit-exact parity of the
-vectorized ``shard_view`` with the per-partition loop.
+plus the contracts asserted — exactly one trace of the train step across
+N steps of *all three* strategies, bit-exact parity of the vectorized
+``shard_view`` with the per-partition loop, bit-exact parity of the
+vectorized/cached view builders with their loop/recompute oracles, and
+bit-identical trainer loss trajectories for prefetch_workers in {1, 4}
+and prefetch disabled (multi-stream determinism).
 
 Standalone (sets fake host devices before importing jax):
 
@@ -58,6 +67,146 @@ def _run_naive(engine, step_fn, opt, views, steps: int):
                                           shard_view_loop(engine.plan, view))
         loss = float(loss)   # the old loops' per-step logging sync
     return time.perf_counter() - t0
+
+
+def _view_build_section(g, K: int, clusters, smoke: bool) -> dict:
+    """Time view construction alone (no device work): loop vs vectorized
+    vs builder for mini-batch k-hop views, recompute vs cached for
+    cluster views. Parity of every fast path against its oracle is
+    hard-asserted (bit-exact masks) before timing."""
+    import numpy as np
+
+    from benchmarks.common import emit
+    from repro.core.subgraph import bfs_layers_loop, khop_subgraph_view
+    from repro.core.views import (ClusterViewCache, ViewBuilder,
+                                  cluster_view_recompute)
+
+    K = int(K)
+    N, E = g.num_nodes, g.num_edges
+    train = (g.train_mask if g.train_mask is not None
+             else np.ones(N, bool))
+    labeled = np.where(train)[0]
+    rng = np.random.default_rng(0)
+    n_views = 3 if smoke else 10
+    repeats = 1 if smoke else 5
+    halo = 2
+    bsz = min(max(16, 3 * N // 8), len(labeled))
+    targets = [rng.choice(labeled, size=bsz, replace=False)
+               for _ in range(n_views)]
+    C = int(clusters.max()) + 1
+    cpb = min(max(1, C // 4), C)
+    chosen = [rng.choice(C, size=cpb, replace=False)
+              for _ in range(n_views)]
+
+    t0 = time.perf_counter()
+    cache = ClusterViewCache(g, clusters, halo)
+    cache_build_s = time.perf_counter() - t0
+    vb = ViewBuilder(g, K)
+
+    # -- parity contracts (bit-exact masks, asserted in smoke AND full) ------
+    for t in targets[:2]:
+        na, ea, lm, _ = khop_subgraph_view(g, t, K, _bfs=bfs_layers_loop)
+        v = vb.khop_view(t)
+        assert np.array_equal(v.node_active, na), "khop node mask diverges"
+        assert np.array_equal(v.edge_active, ea), "khop edge mask diverges"
+        assert np.array_equal(v.loss_mask, lm), "khop loss mask diverges"
+    for ch in chosen[:2]:
+        member, active, loss = cluster_view_recompute(g, clusters, ch,
+                                                      halo, train)
+        v = vb.cluster_view(ch, cache, train)
+        assert np.array_equal(
+            v.node_active,
+            np.broadcast_to(active.astype(np.float32), (K, N))), \
+            "cluster node mask diverges"
+        assert np.array_equal(
+            v.edge_active,
+            np.broadcast_to((active[g.src] & active[g.dst])
+                            .astype(np.float32), (K, E))), \
+            "cluster edge mask diverges"
+        assert np.array_equal(v.loss_mask, loss), "cluster loss diverges"
+    emit("strategies/contract_view_parity", 0.0,
+         "builder==loop-oracle;cached==recompute-oracle")
+
+    def mini_loop():
+        for t in targets:
+            khop_subgraph_view(g, t, K, _bfs=bfs_layers_loop)
+
+    def mini_vectorized():
+        for t in targets:
+            khop_subgraph_view(g, t, K)
+
+    def mini_builder():
+        for t in targets:
+            vb.khop_view(t)
+
+    def cluster_recompute():
+        # the pre-cache path end to end: isin + halo walks + dense masks
+        for ch in chosen:
+            member, active, loss = cluster_view_recompute(g, clusters, ch,
+                                                          halo, train)
+            np.broadcast_to(active.astype(np.float32), (K, N)).copy()
+            np.broadcast_to((active[g.src] & active[g.dst])
+                            .astype(np.float32), (K, E)).copy()
+
+    def cluster_cached():
+        for ch in chosen:
+            vb.cluster_view(ch, cache, train)
+
+    variants = {"mini_loop": mini_loop, "mini_vectorized": mini_vectorized,
+                "mini_builder": mini_builder,
+                "cluster_recompute": cluster_recompute,
+                "cluster_cached": cluster_cached}
+    walls = {k: float("inf") for k in variants}
+    names = list(variants)
+    for r in range(repeats):
+        for k in names[r % len(names):] + names[: r % len(names)]:
+            fn = variants[k]
+            t0 = time.perf_counter()
+            fn()
+            walls[k] = min(walls[k], time.perf_counter() - t0)
+    vps = {k: n_views / w for k, w in walls.items()}
+    for k, v in vps.items():
+        emit(f"strategies/view_build_{k}",
+             walls[k] / n_views * 1e6, f"views_per_sec={v:.1f}")
+    return {
+        "n_views": n_views, "repeats": repeats, "halo_hops": halo,
+        "batch_nodes": int(bsz), "clusters_per_batch": int(cpb),
+        "num_nodes": N, "num_edges": E, "K": K,
+        "cache_build_s": round(cache_build_s, 5),
+        "views_per_sec": {k: round(v, 1) for k, v in vps.items()},
+        "ms_per_view": {k: round(w / n_views * 1e3, 4)
+                        for k, w in walls.items()},
+        "vectorized_speedup_vs_loop": round(
+            walls["mini_loop"] / walls["mini_vectorized"], 2),
+        "builder_speedup_vs_loop": round(
+            walls["mini_loop"] / walls["mini_builder"], 2),
+        "cached_speedup_vs_recompute": round(
+            walls["cluster_recompute"] / walls["cluster_cached"], 2),
+        "vectorized_beats_loop": bool(
+            walls["mini_vectorized"] < walls["mini_loop"]),
+        "builder_beats_loop": bool(
+            walls["mini_builder"] < walls["mini_loop"]),
+        "cached_beats_recompute": bool(
+            walls["cluster_cached"] < walls["cluster_recompute"]),
+    }
+
+
+def _assert_multistream_determinism(trainer, views_for) -> None:
+    """The multi-stream prefetch contract: loss trajectories are
+    bit-identical for prefetch_workers in {1, 4} and prefetch off."""
+    for strategy in ("mini", "cluster"):
+        ref = None
+        for kwargs in ({"prefetch": False},
+                       {"prefetch": True, "prefetch_workers": 1},
+                       {"prefetch": True, "prefetch_workers": 4}):
+            trainer.reset(seed=0)
+            losses = trainer.fit(views_for(strategy, seed=17), steps=3,
+                                 **kwargs)["losses"]
+            if ref is None:
+                ref = losses
+            assert losses == ref, (
+                f"multi-stream prefetch broke determinism: {strategy} "
+                f"{kwargs} {losses} != {ref}")
 
 
 def _run_trainer(trainer, views, steps: int, prefetch: bool):
@@ -129,6 +278,9 @@ def strategies(smoke: bool = False, out_json: str = "BENCH_strategies.json",
                 f"{strategy}/{k}")
     emit("strategies/contract_shard_view", 0.0, "vectorized==loop")
 
+    # -- host-side view construction: loop vs vectorized vs cached -----------
+    view_build = _view_build_section(g, 2, clusters, smoke)
+
     rows, summary = [], {}
     for backend in ("reference", "csc"):
         cfg = GNNConfig(model="gcn", num_layers=2, hidden_dim=hidden,
@@ -182,6 +334,12 @@ def strategies(smoke: bool = False, out_json: str = "BENCH_strategies.json",
                 "prefetch_speedup_vs_no_prefetch": round(
                     walls["trainer"] / walls["trainer_prefetch"], 3),
             }
+        if smoke and backend == "reference":
+            # multi-stream determinism: same trajectory for any worker
+            # count (the steps ride on the same compiled-once executable)
+            _assert_multistream_determinism(trainer, views_for)
+            emit("strategies/contract_multistream_determinism", 0.0,
+                 "workers{1,4}==no-prefetch")
         # compiled-once across ALL strategies on one engine — the Trainer
         # contract the paper's flexible-strategy claim rides on
         trainer.assert_compiled_once()
@@ -196,6 +354,7 @@ def strategies(smoke: bool = False, out_json: str = "BENCH_strategies.json",
         "mode": "smoke" if smoke else "full",
         "rows": rows,
         "summary": summary,
+        "view_build": view_build,
         # headline: total wall over all strategy x backend cells — the
         # per-cell margins for the cheap-host-prep cells sit near the
         # 2-core box's timing noise, the aggregate does not

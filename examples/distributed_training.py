@@ -5,9 +5,11 @@ with the in-house GAT-E model, under all three training strategies.
 
 Since PR 4 the loop is the compiled-once :class:`repro.core.Trainer`:
 one jitted train step serves global-, mini- and cluster-batch alike while
-a background thread shards (vectorized ``shard_view``) and stages the next
-view — and ``assert_compiled_once()`` certifies that no strategy switch
-ever retraced it.
+a pool of prefetch workers builds (vectorized ViewBuilder, cached cluster
+sets), shards (vectorized ``shard_view``) and stages upcoming views —
+deterministically, since view i depends only on (seed, i) — and
+``assert_compiled_once()`` certifies that no strategy switch ever
+retraced the step.
 
     PYTHONPATH=src python examples/distributed_training.py [--steps 200]
 """
@@ -41,6 +43,9 @@ def main():
                     help="Sum-stage aggregation backend")
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable the host-side view prefetch pipeline")
+    ap.add_argument("--prefetch-workers", type=int, default=None,
+                    help="view-builder threads (default: min(4, cores-1); "
+                    "any count yields a bit-identical loss trajectory)")
     ap.add_argument("--checkpoint-dir", default=None)
     args = ap.parse_args()
 
@@ -74,6 +79,7 @@ def main():
         t0 = time.perf_counter()
         out = trainer.fit(views, steps=steps_per,
                           prefetch=not args.no_prefetch,
+                          prefetch_workers=args.prefetch_workers,
                           checkpoint_every=steps_per if args.checkpoint_dir
                           else 0,
                           checkpoint_dir=args.checkpoint_dir)

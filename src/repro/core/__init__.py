@@ -15,7 +15,13 @@ from repro.core.strategies import (
     GraphView, global_batch_view, mini_batch_views, cluster_batch_views,
     shard_view, shard_view_loop, strategy_views,
 )
-from repro.core.subgraph import khop_subgraph_view, bfs_layers
+from repro.core.views import (
+    ClusterViewCache, ClusterViewStream, GlobalViewStream,
+    MiniBatchViewStream, ViewBuilder, ViewStream, cluster_view_recompute,
+)
+from repro.core.subgraph import (
+    khop_subgraph_view, bfs_layers, bfs_layers_loop,
+)
 from repro.core.clustering import label_propagation_clusters, hash_clusters
 from repro.core.engine import HybridParallelEngine
 from repro.core.trainer import RetraceError, Trainer

@@ -20,6 +20,18 @@ import numpy as np
 from repro.graph.csr import Graph
 
 
+def cluster_members(labels: np.ndarray,
+                    num_clusters: Optional[int] = None) -> list:
+    """Per-cluster sorted member node-id arrays, in one argsort instead of
+    C boolean scans. The ClusterViewCache (repro.core.views) builds its
+    static member sets through this."""
+    labels = np.asarray(labels)
+    C = int(num_clusters if num_clusters is not None else labels.max() + 1)
+    order = np.argsort(labels, kind="stable")   # ties keep node-id order
+    counts = np.bincount(labels, minlength=C)
+    return np.split(order, np.cumsum(counts)[:-1])
+
+
 def hash_clusters(g: Graph, num_clusters: int, seed: int = 0) -> np.ndarray:
     rng = np.random.default_rng(seed)
     perm = rng.permutation(g.num_nodes)

@@ -6,46 +6,34 @@ the single-shard path (``as_block``) and the distributed hybrid-parallel
 engine (``shard_view`` maps global masks onto a PartitionPlan). Global-,
 mini- and cluster-batch are all expressed as views — the unification the
 paper claims as its second contribution.
+
+View *construction* lives in :mod:`repro.core.views` (the vectorized
+engine: reusable mask buffers, the cluster-view cache, indexable
+per-index-RNG streams). This module keeps the strategy entry points:
+
+- the legacy generator API (``mini_batch_views`` / ``cluster_batch_views``)
+  — sequential RNG, detached (freshly copied) mask arrays, semantics
+  unchanged — now running on the vectorized builder underneath, and
+- :func:`strategy_views`, which returns a :class:`repro.core.views.ViewStream`
+  — the indexable form the Trainer's multi-stream prefetch pool and the
+  checkpointable view cursor require.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Iterator, Optional
 
 import numpy as np
 
-from repro.graph.csr import Graph, GraphBlock, build_block
-from repro.core.subgraph import khop_subgraph_view
+from repro.graph.csr import Graph
+from repro.core.views import (ClusterViewCache, ClusterViewStream,
+                              GlobalViewStream, GraphView,
+                              MiniBatchViewStream, ViewBuilder, ViewStream)
 
-
-@dataclass
-class GraphView:
-    graph: Graph
-    K: int
-    strategy: str
-    node_active: Optional[np.ndarray]    # (K, N) f32 or None (=all)
-    edge_active: Optional[np.ndarray]    # (K, M) f32 or None
-    loss_mask: np.ndarray                # (N,) f32
-    meta: dict
-
-    def as_block(self, gcn_norm: bool = True,
-                 csc_plan: bool = False) -> GraphBlock:
-        """``csc_plan=True`` attaches the graph's cached CSCPlan (shared by
-        all views — only the activity masks differ) for the "csc"
-        aggregation backend."""
-        block = build_block(self.graph, loss_mask=self.loss_mask > 0,
-                            gcn_norm=gcn_norm, csc_plan=csc_plan)
-        block.node_active = self.node_active
-        block.edge_active = self.edge_active
-        return block
-
-    def active_counts(self) -> dict:
-        n_nodes = (self.graph.num_nodes if self.node_active is None
-                   else int((self.node_active.max(axis=0) > 0).sum()))
-        n_edges = (self.graph.num_edges if self.edge_active is None
-                   else int((self.edge_active.max(axis=0) > 0).sum()))
-        return {"active_nodes": n_nodes, "active_edges": n_edges,
-                "targets": int((self.loss_mask > 0).sum())}
+__all__ = [
+    "GraphView", "ViewStream", "global_batch_view", "mini_batch_views",
+    "cluster_batch_views", "strategy_views", "shard_view",
+    "shard_view_loop",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -66,7 +54,13 @@ def mini_batch_views(g: Graph, K: int, batch_nodes: int = 0,
                      steps: Optional[int] = None) -> Iterator[GraphView]:
     """Random labeled targets + K-hop BFS active sets. ``neighbor_cap``
     enables random neighbor sampling (off by default — non-sampling is the
-    paper's point). Paper defaults: 1% of labeled nodes per step."""
+    paper's point). Paper defaults: 1% of labeled nodes per step.
+
+    Legacy generator API: one sequential RNG (identical target sequences
+    to the pre-engine implementation when ``neighbor_cap == 0``) and
+    detached mask arrays. The Trainer path uses the indexable
+    :class:`repro.core.views.MiniBatchViewStream` instead.
+    """
     rng = np.random.default_rng(seed)
     labeled = np.where(g.train_mask if g.train_mask is not None
                        else np.ones(g.num_nodes, bool))[0]
@@ -77,15 +71,12 @@ def mini_batch_views(g: Graph, K: int, batch_nodes: int = 0,
             "mini_batch_views: the graph has no labeled nodes "
             "(train_mask selects nothing) to sample batch targets from")
     bsz = batch_nodes or max(1, len(labeled) // 100)
+    builder = ViewBuilder(g, K, slots=1)   # views are copied out below
     i = 0
     while steps is None or i < steps:
         targets = rng.choice(labeled, size=min(bsz, len(labeled)),
                              replace=False)
-        na, ea, lm, visited = khop_subgraph_view(g, targets, K,
-                                                 neighbor_cap, rng)
-        yield GraphView(g, K, "mini", na, ea, lm,
-                        {"targets": len(targets),
-                         "touched": int(visited.sum())})
+        yield builder.khop_view(targets, neighbor_cap, rng).copy_masks()
         i += 1
 
 
@@ -98,35 +89,24 @@ def cluster_batch_views(g: Graph, K: int, clusters: np.ndarray,
     Picks random clusters; active nodes = cluster members (+ optional 1- or
     2-hop boundary halo — the paper's extension over Cluster-GCN, App. B);
     active edges = edges inside the active set; loss on labeled members.
+
+    Per-cluster member/halo sets are cached once (ClusterViewCache) and
+    composed per step — the per-step ``np.isin`` membership scan and halo
+    edge walks of the old implementation are gone (bit-exact against
+    :func:`repro.core.views.cluster_view_recompute`, the retained oracle).
     """
     rng = np.random.default_rng(seed)
     num_clusters = int(clusters.max()) + 1
     cpb = clusters_per_batch or max(1, num_clusters // 100)
     train = (g.train_mask if g.train_mask is not None
              else np.ones(g.num_nodes, bool))
+    cache = ClusterViewCache(g, clusters, halo_hops)
+    builder = ViewBuilder(g, K, slots=1)   # views are copied out below
     i = 0
     while steps is None or i < steps:
         chosen = rng.choice(num_clusters, size=min(cpb, num_clusters),
                             replace=False)
-        member = np.isin(clusters, chosen)
-        active = member.copy()
-        for _ in range(halo_hops):
-            # grow along incoming edges (neighbors feeding the members)
-            grow = np.zeros(g.num_nodes, bool)
-            inside = active[g.dst]
-            grow[g.src[inside]] = True
-            active |= grow
-        node_active = np.broadcast_to(
-            active.astype(np.float32), (K, g.num_nodes)).copy()
-        eact = (active[g.src] & active[g.dst]).astype(np.float32)
-        edge_active = np.broadcast_to(eact, (K, g.num_edges)).copy()
-        loss = (member & train).astype(np.float32)
-        if loss.sum() == 0:
-            loss = member.astype(np.float32)
-        yield GraphView(g, K, "cluster", node_active, edge_active, loss,
-                        {"clusters": [int(c) for c in chosen],
-                         "members": int(member.sum()),
-                         "active": int(active.sum())})
+        yield builder.cluster_view(chosen, cache, train).copy_masks()
         i += 1
 
 
@@ -135,32 +115,31 @@ def strategy_views(g: Graph, strategy: str, K: int, seed: int = 0,
                    batch_nodes: int = 0,
                    clusters: Optional[np.ndarray] = None,
                    clusters_per_batch: int = 0,
-                   halo_hops: int = 1) -> Iterator[GraphView]:
+                   halo_hops: int = 1) -> ViewStream:
     """One entry point for all three strategies (paper §2.3): returns the
-    GraphView iterator the Trainer / examples / benchmarks drive. The
-    ``cluster`` strategy computes label-propagation communities when
-    ``clusters`` is not supplied."""
+    indexable :class:`ViewStream` the Trainer / examples / benchmarks
+    drive (also a plain iterator, so ``next()`` keeps working). View i is
+    a pure function of ``(seed, i)``, which is what makes the Trainer's
+    multi-stream prefetch deterministic and the stream cursor
+    checkpointable. The ``cluster`` strategy computes label-propagation
+    communities when ``clusters`` is not supplied.
+    """
     if strategy == "global":
-        # the global view is static — yield the SAME object every step so
-        # consumers (Trainer) can recognize it and stage it once
-        view = global_batch_view(g, K)
-        it = iter(lambda: view, None)
-        if steps is None:
-            return it
-        import itertools
-        return itertools.islice(it, steps)
+        # the global view is static — every index yields the SAME object
+        # so consumers (Trainer) can recognize it and stage it once
+        return GlobalViewStream(global_batch_view(g, K), length=steps)
     if strategy == "mini":
-        return mini_batch_views(g, K, batch_nodes=batch_nodes, seed=seed,
-                                steps=steps)
+        return MiniBatchViewStream(g, K, batch_nodes=batch_nodes,
+                                   seed=seed, length=steps)
     if strategy == "cluster":
         if clusters is None:
             from repro.core.clustering import label_propagation_clusters
             clusters = label_propagation_clusters(
                 g, max_cluster_size=max(64, g.num_nodes // 20), seed=seed)
-        return cluster_batch_views(g, K, clusters,
-                                   clusters_per_batch=clusters_per_batch,
-                                   halo_hops=halo_hops, seed=seed,
-                                   steps=steps)
+        return ClusterViewStream(g, K, clusters,
+                                 clusters_per_batch=clusters_per_batch,
+                                 halo_hops=halo_hops, seed=seed,
+                                 length=steps)
     raise ValueError(f"unknown strategy {strategy!r} "
                      "(expected global|mini|cluster)")
 
@@ -180,7 +159,7 @@ def shard_view(plan, view: GraphView) -> dict:
     Fully vectorized: one ``np.take`` over the stacked ``plan.masters`` /
     ``plan.edge_orig`` index arrays per mask, so the host cost per step is
     O(1) Python regardless of P — this is the per-step hot path the
-    Trainer's prefetch thread runs (see :mod:`repro.core.trainer`).
+    Trainer's prefetch workers run (see :mod:`repro.core.trainer`).
     """
     P = plan.P
     K = view.K

@@ -9,8 +9,15 @@ challenge 3): memory O(K·N) bits, no subgraph copy-out, and the global
 CSR/CSC indexing is reused exactly as §4.2 prescribes (vertex-ID mapping =
 identity here because we never re-index).
 
-Optional random neighbor sampling (GraphSAGE-style) caps fan-in per hop —
-the paper implements it but champions the non-sampling path.
+Frontier expansion is fully vectorized (the host-side hot path of
+mini-batch view construction — the bottleneck DistDGL attacks with
+dedicated samplers): all out-slices of the frontier are expanded in one
+``np.repeat`` over the CSC indptr degree counts, dedup runs through a
+boolean visited array instead of per-hop ``np.unique``/``np.union1d``, and
+the optional per-node neighbor cap (GraphSAGE-style sampling [31]) is a
+single segment-ranked draw over the expanded edge slots. The original
+per-node Python loop survives as :func:`bfs_layers_loop`, the parity
+oracle (tests assert bit-exact hop sets for the non-sampling path).
 """
 from __future__ import annotations
 
@@ -21,16 +28,109 @@ import numpy as np
 from repro.graph.csr import Graph
 
 
+def _require_rng(neighbor_cap: int, rng) -> None:
+    """``neighbor_cap`` sampling without a Generator used to be a bare
+    ``assert`` — which vanishes under ``python -O`` and then crashes (or
+    silently mis-samples) deep inside the hop loop. Fail loudly up front."""
+    if neighbor_cap and rng is None:
+        raise ValueError(
+            "neighbor_cap sampling needs an explicit numpy Generator: "
+            "pass rng=np.random.default_rng(seed) (a hidden default would "
+            "make view streams non-reproducible)")
+
+
 def bfs_layers(g: Graph, targets: np.ndarray, depth: int,
-               neighbor_cap: int = 0, rng: Optional[np.random.Generator] = None):
+               neighbor_cap: int = 0,
+               rng: Optional[np.random.Generator] = None,
+               _visited_out: Optional[np.ndarray] = None):
     """Hop sets [S_0=targets, S_1, ..., S_depth] where S_k = nodes at <=k
     hops following *incoming* edges (messages flow src->dst, so computing
     h^K on targets needs h^{K-1} on their in-neighbors, etc.).
 
     neighbor_cap > 0 samples at most that many in-neighbors per node per
-    hop (random neighbor sampling [31]).
+    hop (random neighbor sampling [31]); requires ``rng``.
+
+    Vectorized: per hop, one CSR-segment expansion of every frontier
+    out-slice (``np.repeat`` over degree counts) and boolean-array dedup.
+    Bit-exact with :func:`bfs_layers_loop` when ``neighbor_cap == 0``
+    (with a cap both draw different — equally valid — samples).
+    ``_visited_out`` lets callers (ViewBuilder) supply a reusable (N,)
+    bool scratch instead of a fresh allocation.
     """
+    _require_rng(neighbor_cap, rng)
     indptr, order = g.csc()            # incoming edges per node
+    src = g.src
+    frontier = np.unique(targets).astype(np.int64)
+    if _visited_out is not None:
+        visited = _visited_out
+        visited.fill(False)
+    else:
+        visited = np.zeros(g.num_nodes, bool)
+    visited[frontier] = True
+    hops = [frontier]
+    reached = frontier
+    for _ in range(depth):
+        eidx = _expand_frontier(indptr, order, reached, neighbor_cap, rng)
+        if len(eidx):
+            cand = src[eidx]
+            new_mask = np.zeros(g.num_nodes, bool)
+            new_mask[cand] = True
+            new_mask &= ~visited
+            visited |= new_mask
+            new = np.flatnonzero(new_mask)
+        else:
+            new = np.zeros(0, np.int64)
+        # hops[-1] ∪ new == all visited so far, already sorted
+        hops.append(np.flatnonzero(visited))
+        reached = new
+        if len(new) == 0:
+            # keep remaining hop sets constant
+            for _ in range(depth - len(hops) + 1):
+                hops.append(hops[-1])
+            break
+    return hops, visited
+
+
+def _expand_frontier(indptr: np.ndarray, order: np.ndarray,
+                     reached: np.ndarray, neighbor_cap: int,
+                     rng) -> np.ndarray:
+    """Edge ids (into the global edge arrays) of every incoming edge of
+    ``reached``, expanded in one shot: ``np.repeat`` of the per-node slice
+    starts over the degree counts plus an arange ramp. With a cap, each
+    node keeps the ``cap`` smallest of per-slot uniform keys — a
+    without-replacement sample per segment, drawn for all segments in one
+    ``rng.random`` call."""
+    if len(reached) == 0:
+        return np.zeros(0, np.int32)
+    starts = indptr[reached]
+    degs = indptr[reached + 1] - starts
+    total = int(degs.sum())
+    if total == 0:
+        return np.zeros(0, np.int32)
+    cum = np.cumsum(degs)
+    seg_off = np.repeat(cum - degs, degs)        # expanded segment starts
+    pos = np.arange(total, dtype=np.int64)
+    idx = pos - seg_off + np.repeat(starts, degs)
+    if neighbor_cap:
+        keys = rng.random(total)
+        seg_ids = np.repeat(np.arange(len(reached), dtype=np.int64), degs)
+        sorter = np.lexsort((keys, seg_ids))
+        # segments stay contiguous at the same offsets after the sort, so
+        # sorted position p has within-segment rank p - seg_off[p]
+        rank = pos - seg_off
+        idx = idx[sorter[rank < neighbor_cap]]
+    return order[idx]
+
+
+def bfs_layers_loop(g: Graph, targets: np.ndarray, depth: int,
+                    neighbor_cap: int = 0,
+                    rng: Optional[np.random.Generator] = None):
+    """Reference per-node Python loop implementation of
+    :func:`bfs_layers` — the parity oracle (tests assert bit-exact hop
+    sets and masks) and the host-path baseline timed by
+    ``benchmarks/strategies_bench.py view_build``."""
+    _require_rng(neighbor_cap, rng)
+    indptr, order = g.csc()
     src = g.src
     frontier = np.unique(targets).astype(np.int64)
     visited = np.zeros(g.num_nodes, bool)
@@ -42,7 +142,6 @@ def bfs_layers(g: Graph, targets: np.ndarray, depth: int,
         for u in reached:
             eids = order[indptr[u]:indptr[u + 1]]
             if neighbor_cap and len(eids) > neighbor_cap:
-                assert rng is not None
                 eids = rng.choice(eids, neighbor_cap, replace=False)
             nbrs.append(src[eids])
         new = (np.unique(np.concatenate(nbrs)) if nbrs
@@ -59,30 +158,51 @@ def bfs_layers(g: Graph, targets: np.ndarray, depth: int,
     return hops, visited
 
 
-def khop_subgraph_view(g: Graph, targets: np.ndarray, K: int,
-                       neighbor_cap: int = 0,
-                       rng: Optional[np.random.Generator] = None):
-    """Per-layer active sets for a K-layer GNN computing loss on targets.
-
-    Returns (node_active (K, N) f32, edge_active (K, E) f32,
-    loss_mask (N,) f32, subgraph_nodes (bool N)).
+def fill_khop_masks(g: Graph, hops, K: int, node_active: np.ndarray,
+                    edge_active: np.ndarray,
+                    in_hop: Optional[np.ndarray] = None) -> None:
+    """Write the per-layer active masks derived from BFS ``hops`` into the
+    caller-owned ``(K, N)``/``(K, E)`` float32 buffers (zeroed here — the
+    ViewBuilder reuses its buffers across steps, so no fresh allocations).
 
     Layer k (0-based, output = h^{k+1}) must produce embeddings for nodes
     within K-1-k hops of the targets; its active edges are those whose dst
     is in that set and whose src is within one more hop.
     """
-    hops, visited = bfs_layers(g, targets, K, neighbor_cap, rng)
-    N, E = g.num_nodes, g.num_edges
-    node_active = np.zeros((K, N), np.float32)
-    edge_active = np.zeros((K, E), np.float32)
-    in_hop = np.zeros((K + 1, N), bool)
+    N = g.num_nodes
+    if in_hop is None:
+        in_hop = np.zeros((K + 1, N), bool)
+    else:
+        in_hop.fill(False)
     for d in range(K + 1):
         in_hop[d, hops[min(d, len(hops) - 1)]] = True
+    node_active.fill(0.0)
+    edge_active.fill(0.0)
     for k in range(K):
         out_set = in_hop[K - 1 - k]          # nodes whose h^{k+1} is needed
         src_set = in_hop[K - k]              # their in-neighborhood
         node_active[k, out_set] = 1.0
-        edge_active[k] = (out_set[g.dst] & src_set[g.src]).astype(np.float32)
+        edge_active[k] = out_set[g.dst] & src_set[g.src]
+
+
+def khop_subgraph_view(g: Graph, targets: np.ndarray, K: int,
+                       neighbor_cap: int = 0,
+                       rng: Optional[np.random.Generator] = None,
+                       _bfs=None):
+    """Per-layer active sets for a K-layer GNN computing loss on targets.
+
+    Returns (node_active (K, N) f32, edge_active (K, E) f32,
+    loss_mask (N,) f32, subgraph_nodes (bool N)).
+
+    ``_bfs`` swaps the frontier-expansion implementation (the bench times
+    :func:`bfs_layers_loop` through it); allocation-free repeated
+    construction goes through :class:`repro.core.views.ViewBuilder`.
+    """
+    hops, visited = (_bfs or bfs_layers)(g, targets, K, neighbor_cap, rng)
+    N, E = g.num_nodes, g.num_edges
+    node_active = np.zeros((K, N), np.float32)
+    edge_active = np.zeros((K, E), np.float32)
+    fill_khop_masks(g, hops, K, node_active, edge_active)
     loss_mask = np.zeros(N, np.float32)
     loss_mask[np.unique(targets)] = 1.0
     return node_active, edge_active, loss_mask, visited

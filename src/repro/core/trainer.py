@@ -10,9 +10,16 @@ the bottleneck is not the device math but the host-side batch preparation
 1. **Vectorized sharding** — views are mapped onto the plan with the
    ``np.take``-based :func:`repro.core.strategies.shard_view` (O(1) Python
    per step instead of a per-partition loop).
-2. **Double-buffered prefetch** — a daemon thread builds and
-   ``device_put``\\ s the view arrays for step *i+1* while step *i* runs on
-   the devices, so host work and device compute overlap.
+2. **Multi-stream prefetch** — for an indexable
+   :class:`repro.core.views.ViewStream` (what ``strategy_views`` returns),
+   a pool of ``prefetch_workers`` threads builds + shards + stages views
+   ahead of the consumer, each worker owning a private
+   :class:`~repro.core.views.ViewBuilder` (reused mask buffers). Because
+   view i is a pure function of ``(seed, i)`` and the pool emits in index
+   order, the loss trajectory is **bit-identical** for any worker count
+   and for prefetch disabled — parallelism never costs reproducibility.
+   Plain iterators fall back to the single-thread double-buffered
+   pipeline.
 3. **Compiled-once contract** — the jitted step donates its view buffers
    and carries a compile counter; :meth:`Trainer.assert_compiled_once`
    turns a silent retrace (a 10x regression in disguise) into a hard
@@ -35,6 +42,7 @@ Usage::
 from __future__ import annotations
 
 import itertools
+import os
 import queue
 import threading
 from typing import Any, Iterable, Iterator, Optional
@@ -44,6 +52,7 @@ import numpy as np
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.core.strategies import GraphView, shard_view
+from repro.core.views import ViewStream
 
 
 class RetraceError(AssertionError):
@@ -116,6 +125,108 @@ class _ViewPrefetcher:
         return item
 
 
+class _MultiStreamPrefetcher:
+    """Worker-pool pipeline over an indexable :class:`ViewStream`.
+
+    ``workers`` threads each own a private ViewBuilder and claim view
+    indices from a shared counter; finished (built + sharded + staged)
+    views land in a reorder buffer and are emitted strictly in index
+    order. Since ``stream.build(i)`` derives its RNG from ``(seed, i)``,
+    the emitted sequence is bit-identical to sequential construction no
+    matter how the OS schedules the workers.
+
+    Run-ahead is bounded: no worker starts index i until
+    ``i - emitted < depth + workers - 1``, so at most ~depth staged views
+    wait in the buffer while every worker stays busy. The stream's cursor
+    advances only as views are *emitted* (not as they are built), which is
+    what makes the cursor checkpointable mid-pipeline.
+    """
+
+    def __init__(self, stream: ViewStream, prepare, steps: Optional[int],
+                 workers: int = 1, depth: int = 2):
+        self._stream = stream
+        self._start = stream.cursor
+        left = (None if stream.length is None
+                else max(0, stream.length - self._start))
+        if steps is None:
+            self._limit = left
+        else:
+            self._limit = steps if left is None else min(steps, left)
+        self._prepare = prepare
+        self._cond = threading.Condition()
+        self._results: dict = {}
+        self._next_build = 0
+        self._emitted = 0
+        self._err: Optional[BaseException] = None
+        self._cancel = False
+        # materialize the graph's lazy CSC index before the fan-out so
+        # worker-thread builders never race the unlocked cache
+        stream.g.csc()
+        workers = max(1, workers)
+        self._max_ahead = max(1, depth) + workers - 1
+        self._threads = [
+            threading.Thread(target=self._work, daemon=True,
+                             name=f"view-stream-{w}")
+            for w in range(workers)]
+        for t in self._threads:
+            t.start()
+
+    def _work(self):
+        try:
+            builder = self._stream.make_builder()
+            while True:
+                with self._cond:
+                    while (not self._cancel and self._err is None
+                           and (self._limit is None
+                                or self._next_build < self._limit)
+                           and (self._next_build - self._emitted
+                                >= self._max_ahead)):
+                        self._cond.wait()
+                    if (self._cancel or self._err is not None
+                            or (self._limit is not None
+                                and self._next_build >= self._limit)):
+                        return
+                    i = self._next_build
+                    self._next_build += 1
+                item = self._prepare(
+                    self._stream.build(self._start + i, builder))
+                with self._cond:
+                    self._results[i] = item
+                    self._cond.notify_all()
+        except BaseException as e:  # noqa: BLE001 — surfaced in __next__
+            with self._cond:
+                if self._err is None:
+                    self._err = e
+                self._cond.notify_all()
+
+    def close(self):
+        with self._cond:
+            self._cancel = True
+            self._results.clear()
+            self._cond.notify_all()
+        for t in self._threads:
+            t.join(timeout=5)
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        with self._cond:
+            if self._limit is not None and self._emitted >= self._limit:
+                raise StopIteration
+            while self._emitted not in self._results and self._err is None:
+                self._cond.wait()
+            if self._emitted not in self._results:
+                err = self._err
+                raise err
+            item = self._results.pop(self._emitted)
+            self._emitted += 1
+            self._cond.notify_all()
+        # cursor = views handed to the consumer, exact for checkpointing
+        self._stream.seek(self._start + self._emitted)
+        return item
+
+
 class Trainer:
     """Drives any GraphView iterator through a :class:`HybridParallelEngine`
     with one shape-stable, compiled-once train step.
@@ -142,6 +253,10 @@ class Trainer:
         self.history: list = []
         self.prefetch_depth = prefetch_depth
         self.trace_counts = {"train_step": 0, "infer": 0}
+        # view-stream position (checkpointed so restore() can fast-forward
+        # the stream itself instead of asking the caller to)
+        self.view_cursor = 0
+        self._resume_cursor: Optional[int] = None
 
         lg = engine.make_loss_and_grad()
 
@@ -171,7 +286,8 @@ class Trainer:
     # -- the training loop ----------------------------------------------------
 
     def fit(self, views: Iterable[GraphView], steps: Optional[int] = None,
-            prefetch: bool = True, eval_every: int = 0,
+            prefetch: bool = True, prefetch_workers: Optional[int] = None,
+            eval_every: int = 0,
             eval_view: Optional[GraphView] = None,
             eval_mask: Optional[np.ndarray] = None,
             checkpoint_every: int = 0,
@@ -183,14 +299,23 @@ class Trainer:
         are synced once at the end so per-step host/device overlap is
         never serialized by a blocking ``float()``.
 
+        When ``views`` is an indexable :class:`ViewStream` (what
+        ``strategy_views`` returns) and ``prefetch`` is on, view
+        construction fans out over ``prefetch_workers`` builder threads —
+        deterministically: the loss trajectory is bit-identical for any
+        worker count and for ``prefetch=False``, because view i only
+        depends on ``(seed, i)`` and views are emitted in index order.
+        The default (None) leaves one core for the device executor and
+        caps at 4 — ``min(4, cpu_count - 1)`` — so builder threads never
+        oversubscribe the box the step runs on. Plain iterators use the
+        single-thread double-buffered pipeline.
+
         ``max_in_flight`` bounds the async-dispatch run-ahead: before
         dispatching step *i* the loop blocks on step *i - max_in_flight*,
         so at most that many steps' view/activation buffers are live at
         once — deep run-ahead piles up device memory and (on CPU) slows
         the executor more than the overlap buys.
         """
-        if steps is not None:
-            views = itertools.islice(views, steps)
         stage = lambda v: self.engine.stage_view(  # noqa: E731
             shard_view(self.plan, v))
         if self._donate_views:
@@ -200,16 +325,52 @@ class Trainer:
             # static streams (global batch yields one GraphView object)
             # are staged exactly once and the device buffers reused; the
             # cache holds the view itself so the identity check can't be
-            # fooled by a freed view's id being reused
+            # fooled by a freed view's id being reused. Multiple prefetch
+            # workers may race here: staged is written BEFORE the view key
+            # and misses return their locally staged value, so a racing
+            # reader can at worst duplicate work, never observe a
+            # half-written entry
             cache = {"view": None, "staged": None}
 
             def prepare(v):
-                if cache["view"] is not v:
-                    cache["view"], cache["staged"] = v, stage(v)
-                return cache["staged"]
+                if cache["view"] is v:
+                    return cache["staged"]
+                staged = stage(v)
+                cache["staged"] = staged
+                cache["view"] = v
+                return staged
 
-        staged_iter = (_ViewPrefetcher(views, prepare, self.prefetch_depth)
-                       if prefetch else (prepare(v) for v in views))
+        stream = views if isinstance(views, ViewStream) else None
+        # any fit consumes a pending restore cursor — a plain-iterator fit
+        # must not leave it armed to silently fast-forward a later,
+        # unrelated stream
+        resume, self._resume_cursor = self._resume_cursor, None
+        if stream is not None and resume is not None \
+                and stream.cursor < resume:
+            # a checkpoint restore recorded where the view stream stood —
+            # fast-forward the stream itself (per-index RNG makes the
+            # cursor the entire stream state)
+            stream.seek(resume)
+        if stream is not None:
+            # indexable stream: the worker pool path (workers=1 is the
+            # double-buffered pipeline with exact cursor accounting)
+            if prefetch:
+                if prefetch_workers is None:
+                    prefetch_workers = max(
+                        1, min(4, (os.cpu_count() or 2) - 1))
+                staged_iter = _MultiStreamPrefetcher(
+                    stream, prepare, steps, workers=prefetch_workers,
+                    depth=self.prefetch_depth)
+            else:
+                bounded = (itertools.islice(stream, steps)
+                           if steps is not None else stream)
+                staged_iter = (prepare(v) for v in bounded)
+        else:
+            if steps is not None:
+                views = itertools.islice(views, steps)
+            staged_iter = (_ViewPrefetcher(views, prepare,
+                                           self.prefetch_depth)
+                           if prefetch else (prepare(v) for v in views))
 
         data = self.engine._device_data
         losses, pending, evals = [], [], []
@@ -224,6 +385,8 @@ class Trainer:
                 self.params, self.opt_state, loss = self._step(
                     self.params, self.opt_state, data, staged)
                 self.step_num += 1
+                self.view_cursor = (stream.cursor if stream is not None
+                                    else self.step_num)
                 pending.append(loss)
                 if (eval_every and eval_view is not None
                         and self.step_num % eval_every == 0):
@@ -238,7 +401,8 @@ class Trainer:
                         and self.step_num % checkpoint_every == 0):
                     self.save(checkpoint_dir)
         finally:
-            if isinstance(staged_iter, _ViewPrefetcher):
+            if isinstance(staged_iter,
+                          (_ViewPrefetcher, _MultiStreamPrefetcher)):
                 staged_iter.close()
         losses.extend(float(l) for l in pending)
         self.history.extend(evals)
@@ -267,21 +431,30 @@ class Trainer:
     # -- checkpointing ---------------------------------------------------------
 
     def save(self, directory: str) -> str:
+        # view_cursor is the entire state of a per-index ViewStream (the
+        # RNG stream of view i is derived from (seed, i)), so storing it
+        # lets restore() fast-forward the stream itself
         return save_checkpoint(directory, self.step_num, {
             "params": self.params,
             "opt_state": self.opt_state,
             "step": np.asarray(self.step_num, np.int64),
+            "view_cursor": np.asarray(self.view_cursor, np.int64),
         })
 
     def restore(self, directory: str, step: Optional[int] = None) -> int:
         """Load params/opt state/step from a checkpoint. The restored
         leaves match the compiled step's signature, so resuming does not
-        retrace. Returns the restored step so the caller can fast-forward
-        its view iterator (view streams are host-side state)."""
+        retrace. If the checkpoint recorded a view-stream cursor, the next
+        ``fit`` over a :class:`ViewStream` fast-forwards the stream to it
+        automatically; for plain iterators the returned step lets the
+        caller fast-forward by hand (legacy behavior)."""
         ck = load_checkpoint(directory, step)
         self.params = ck["params"]
         self.opt_state = ck["opt_state"]
         self.step_num = int(ck["step"])
+        if "view_cursor" in ck:      # older checkpoints predate the key
+            self.view_cursor = int(ck["view_cursor"])
+            self._resume_cursor = self.view_cursor
         return self.step_num
 
     # -- contracts / lifecycle ---------------------------------------------------
@@ -298,6 +471,8 @@ class Trainer:
         self.step_num = 0
         self.history = []
         self._eval_cache = None
+        self.view_cursor = 0
+        self._resume_cursor = None
 
     def assert_compiled_once(self):
         """The trace-count contract: after any number of steps across any

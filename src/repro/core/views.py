@@ -1,0 +1,403 @@
+"""Vectorized view-construction engine (paper §2.3/§4.2 host path).
+
+PR 4 made the device step compiled-once, which moved the per-step cost to
+*host-side view construction* — the same batch-preparation bottleneck
+DistDGL attacks with dedicated samplers. This module owns that path:
+
+- :class:`GraphView` — "a light-weighted logic view of the global graph"
+  (per-layer node/edge active masks + a loss mask), the unification all
+  three training strategies reduce to.
+- :class:`ViewBuilder` — builds views into a ring of *reusable*
+  preallocated ``(K, N)``/``(K, E)`` mask buffers: repeated construction
+  does zero fresh mask allocations. Single consumer; a view's arrays are
+  valid until ``slots`` more views are built from the same builder.
+- :class:`ClusterViewCache` — per-cluster member and halo node sets are
+  precomputed **once** from the static clustering; each step's active set
+  is composed by OR-ing the chosen clusters' cached sets, so the per-step
+  ``np.isin`` membership scan and halo edge walks disappear. (Halo
+  distributes over unions: grow(A∪B) = grow(A) ∪ grow(B), because an edge
+  contributes exactly when its dst is inside — so the union of cached
+  per-cluster halos IS the halo of the union, bit-exactly.)
+- :class:`ViewStream` — an *indexable* strategy stream: view i is built
+  from an RNG stream derived from (seed, i), so any worker can build any
+  index and the result is order-stable regardless of scheduling. This is
+  what the Trainer's multi-stream prefetch pool fans out over, and what
+  makes the view cursor checkpointable (the RNG state IS the index).
+
+``cluster_view_recompute`` keeps the pre-cache per-step recompute as the
+parity oracle and benchmark baseline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional, Sequence
+
+import numpy as np
+
+from repro.graph.csr import Graph, GraphBlock, build_block
+from repro.core.subgraph import bfs_layers, fill_khop_masks
+
+
+# ---------------------------------------------------------------------------
+# the view abstraction
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class GraphView:
+    graph: Graph
+    K: int
+    strategy: str
+    node_active: Optional[np.ndarray]    # (K, N) f32 or None (=all)
+    edge_active: Optional[np.ndarray]    # (K, M) f32 or None
+    loss_mask: np.ndarray                # (N,) f32
+    meta: dict
+
+    def as_block(self, gcn_norm: bool = True,
+                 csc_plan: bool = False) -> GraphBlock:
+        """``csc_plan=True`` attaches the graph's cached CSCPlan (shared by
+        all views — only the activity masks differ) for the "csc"
+        aggregation backend."""
+        block = build_block(self.graph, loss_mask=self.loss_mask > 0,
+                            gcn_norm=gcn_norm, csc_plan=csc_plan)
+        block.node_active = self.node_active
+        block.edge_active = self.edge_active
+        return block
+
+    def active_counts(self) -> dict:
+        n_nodes = (self.graph.num_nodes if self.node_active is None
+                   else int((self.node_active.max(axis=0) > 0).sum()))
+        n_edges = (self.graph.num_edges if self.edge_active is None
+                   else int((self.edge_active.max(axis=0) > 0).sum()))
+        return {"active_nodes": n_nodes, "active_edges": n_edges,
+                "targets": int((self.loss_mask > 0).sum())}
+
+    def copy_masks(self) -> "GraphView":
+        """Detach from any builder buffers (fresh mask arrays)."""
+        return GraphView(
+            self.graph, self.K, self.strategy,
+            None if self.node_active is None else self.node_active.copy(),
+            None if self.edge_active is None else self.edge_active.copy(),
+            self.loss_mask.copy(), dict(self.meta))
+
+
+# ---------------------------------------------------------------------------
+# cluster-view cache
+# ---------------------------------------------------------------------------
+
+
+def cluster_view_recompute(g: Graph, clusters: np.ndarray,
+                           chosen: np.ndarray, halo_hops: int,
+                           train: np.ndarray):
+    """The pre-cache per-step recompute: ``np.isin`` membership + halo
+    edge walks. Kept as the parity oracle (tests assert the cached path
+    is bit-exact against it) and as the ``view_build`` bench baseline.
+
+    Returns (member bool(N), active bool(N), loss f32(N)).
+    """
+    member = np.isin(clusters, chosen)
+    active = member.copy()
+    for _ in range(halo_hops):
+        # grow along incoming edges (neighbors feeding the members)
+        grow = np.zeros(g.num_nodes, bool)
+        inside = active[g.dst]
+        grow[g.src[inside]] = True
+        active |= grow
+    loss = (member & train).astype(np.float32)
+    if loss.sum() == 0:
+        loss = member.astype(np.float32)
+    return member, active, loss
+
+
+class ClusterViewCache:
+    """Static per-cluster node sets, computed once per clustering.
+
+    ``members[c]`` — sorted member node ids of cluster c;
+    ``halo[c]`` — sorted node ids of c's ``halo_hops``-grown active set.
+    A step's active set over any chosen cluster subset is the union of the
+    cached sets (halo distributes over unions — see module docstring), so
+    composing a view costs O(Σ|halo(c)|), not O(N + E·halo_hops).
+    """
+
+    def __init__(self, g: Graph, clusters: np.ndarray, halo_hops: int = 0):
+        from repro.core.clustering import cluster_members
+        self.g = g
+        self.clusters = np.asarray(clusters)
+        self.halo_hops = int(halo_hops)
+        self.num_clusters = int(self.clusters.max()) + 1
+        self.members = cluster_members(self.clusters, self.num_clusters)
+        self.halo = (self.members if self.halo_hops == 0
+                     else self._grow_halos())
+
+    def _grow_halos(self) -> list:
+        """Per-cluster halo BFS over in-edges of the *frontier* only —
+        the same CSR-segment expansion as ``bfs_layers`` — with a stamp
+        array (last cluster to visit each node) standing in for a visited
+        bitmap, so there is nothing to clear between clusters. Total work
+        is O(Σ_c in-edges(halo_c)), NOT C full-edge scans per hop (the
+        old recompute's cost, fatal at C ~ thousands)."""
+        from repro.core.subgraph import _expand_frontier
+        g, C = self.g, self.num_clusters
+        indptr, order = g.csc()
+        src = g.src
+        stamp = np.full(g.num_nodes, -1, np.int64)
+        halos = []
+        for c in range(C):
+            frontier = self.members[c]
+            stamp[frontier] = c
+            grown = [frontier]
+            for _ in range(self.halo_hops):
+                eidx = _expand_frontier(indptr, order, frontier, 0, None)
+                if len(eidx) == 0:
+                    break
+                cand = src[eidx]
+                fresh = np.unique(cand[stamp[cand] != c])
+                if len(fresh) == 0:
+                    break
+                stamp[fresh] = c
+                grown.append(fresh)
+                frontier = fresh
+            halos.append(np.unique(np.concatenate(grown))
+                         if len(grown) > 1 else np.asarray(frontier))
+        return halos
+
+    def compose(self, chosen: Sequence[int], member_out: np.ndarray,
+                active_out: np.ndarray) -> None:
+        """OR the chosen clusters' cached sets into the caller's (N,) bool
+        scratch buffers."""
+        member_out.fill(False)
+        member_out[np.concatenate([self.members[c] for c in chosen])] = True
+        active_out.fill(False)
+        active_out[np.concatenate([self.halo[c] for c in chosen])] = True
+
+
+# ---------------------------------------------------------------------------
+# the builder: reusable mask buffers
+# ---------------------------------------------------------------------------
+
+
+class _Slot:
+    def __init__(self, K: int, N: int, E: int):
+        self.node = np.zeros((K, N), np.float32)
+        self.edge = np.zeros((K, E), np.float32)
+        self.loss = np.zeros(N, np.float32)
+
+
+class ViewBuilder:
+    """Builds GraphViews into a ring of preallocated mask buffers.
+
+    Repeated view construction does **zero** fresh ``(K, N)``/``(K, E)``
+    allocations: each build rotates to the next slot and overwrites it.
+    Consequently a built view's arrays alias builder memory and stay valid
+    only until ``slots`` more views are built — the Trainer's pipeline
+    consumes (shards + stages) each view before the ring wraps, and each
+    prefetch worker owns a private builder. Callers that need detached
+    views use :meth:`GraphView.copy_masks`.
+    """
+
+    def __init__(self, g: Graph, K: int, slots: int = 2):
+        self.g = g
+        self.K = K
+        N, E = g.num_nodes, g.num_edges
+        g.csc()     # no-op when cached; the prefetch pool materializes it
+                    # before fan-out, direct users pay it here once
+        self._slots = [_Slot(K, N, E) for _ in range(max(1, slots))]
+        self._turn = 0
+        self.builds = 0
+        # shared scratch (single consumer; never escapes into views)
+        self._visited = np.zeros(N, bool)
+        self._in_hop = np.zeros((K + 1, N), bool)
+        self._member = np.zeros(N, bool)
+        self._active = np.zeros(N, bool)
+
+    def _next_slot(self) -> _Slot:
+        slot = self._slots[self._turn % len(self._slots)]
+        self._turn += 1
+        self.builds += 1
+        return slot
+
+    # -- mini-batch (k-hop BFS) views -----------------------------------------
+
+    def khop_view(self, targets: np.ndarray, neighbor_cap: int = 0,
+                  rng: Optional[np.random.Generator] = None) -> GraphView:
+        """Vectorized :func:`repro.core.subgraph.khop_subgraph_view` into
+        reused buffers; bit-exact with the allocating function."""
+        slot = self._next_slot()
+        hops, visited = bfs_layers(self.g, targets, self.K, neighbor_cap,
+                                   rng, _visited_out=self._visited)
+        fill_khop_masks(self.g, hops, self.K, slot.node, slot.edge,
+                        in_hop=self._in_hop)
+        slot.loss.fill(0.0)
+        slot.loss[np.unique(targets)] = 1.0
+        return GraphView(self.g, self.K, "mini", slot.node, slot.edge,
+                         slot.loss,
+                         {"targets": int(len(np.unique(targets))),
+                          "touched": int(visited.sum())})
+
+    # -- cluster-batch views ---------------------------------------------------
+
+    def cluster_view(self, chosen: np.ndarray, cache: ClusterViewCache,
+                     train: Optional[np.ndarray] = None) -> GraphView:
+        """Compose the chosen clusters' cached member/halo sets; bit-exact
+        with :func:`cluster_view_recompute`."""
+        g = self.g
+        slot = self._next_slot()
+        cache.compose(chosen, self._member, self._active)
+        member, active = self._member, self._active
+        slot.node[:] = active                    # (N,) bool -> (K, N) f32
+        slot.edge[:] = active[g.src] & active[g.dst]
+        if train is None:
+            train = (g.train_mask if g.train_mask is not None
+                     else np.ones(g.num_nodes, bool))
+        np.multiply(member, train, out=slot.loss, casting="unsafe")
+        if not slot.loss.any():
+            slot.loss[:] = member
+        return GraphView(g, self.K, "cluster", slot.node, slot.edge,
+                         slot.loss,
+                         {"clusters": [int(c) for c in chosen],
+                          "members": int(member.sum()),
+                          "active": int(active.sum())})
+
+
+# ---------------------------------------------------------------------------
+# indexable strategy streams (per-index RNG -> order-stable parallel builds)
+# ---------------------------------------------------------------------------
+
+
+class ViewStream:
+    """An indexable stream of GraphViews: ``build(i)`` is a pure function
+    of the index (per-view RNG streams derived from ``(seed, i)``), so
+
+    - the Trainer's multi-stream prefetch pool can build views on any
+      worker in any order and emit them in index order, bit-identically to
+      sequential construction, and
+    - the stream position is a single checkpointable integer
+      (``cursor``) — ``Trainer.restore`` fast-forwards with ``seek``.
+
+    Also a plain iterator (``next`` builds at ``cursor`` and advances) —
+    iterator consumers receive *detached* views (fresh mask arrays, the
+    old generator contract), so buffering several is safe. Zero-copy
+    buffer-ring access is the ``build(i, builder)`` path the Trainer's
+    prefetch pool uses, where each view is consumed before its slot is
+    rebuilt.
+    """
+
+    strategy = "?"
+
+    def __init__(self, g: Graph, K: int, seed: int = 0,
+                 length: Optional[int] = None):
+        self.g = g
+        self.K = K
+        self.seed = int(seed)
+        self.length = length
+        self.cursor = 0
+        self._builder: Optional[ViewBuilder] = None
+
+    # -- the indexable API -----------------------------------------------------
+
+    def rng_for(self, i: int) -> np.random.Generator:
+        """The order-stable per-view RNG stream."""
+        return np.random.default_rng(
+            np.random.SeedSequence(entropy=self.seed, spawn_key=(int(i),)))
+
+    def build(self, i: int,
+              builder: Optional[ViewBuilder] = None) -> GraphView:
+        raise NotImplementedError
+
+    def make_builder(self) -> Optional[ViewBuilder]:
+        """A private ViewBuilder for one consumer thread (None when the
+        stream needs no buffers — the static global view)."""
+        return ViewBuilder(self.g, self.K)
+
+    def seek(self, i: int) -> None:
+        self.cursor = int(i)
+
+    # -- iterator compatibility ------------------------------------------------
+
+    def __iter__(self) -> Iterator[GraphView]:
+        return self
+
+    def __next__(self) -> GraphView:
+        if self.length is not None and self.cursor >= self.length:
+            raise StopIteration
+        if self._builder is None:
+            self._builder = self.make_builder()
+        view = self.build(self.cursor, self._builder)
+        self.cursor += 1
+        if self._builder is not None:
+            # detach from the builder's buffer ring (static streams have
+            # no builder and must keep yielding the identical object)
+            view = view.copy_masks()
+        return view
+
+
+class GlobalViewStream(ViewStream):
+    """The static full-graph view — every index is the same object, so the
+    Trainer's staging cache recognizes it and stages exactly once."""
+
+    strategy = "global"
+
+    def __init__(self, view: GraphView, length: Optional[int] = None):
+        super().__init__(view.graph, view.K, seed=0, length=length)
+        self._view = view
+
+    def build(self, i: int, builder=None) -> GraphView:
+        return self._view
+
+    def make_builder(self) -> None:
+        return None
+
+
+class MiniBatchViewStream(ViewStream):
+    """Random labeled targets + K-hop BFS active sets, one independent RNG
+    stream per index."""
+
+    strategy = "mini"
+
+    def __init__(self, g: Graph, K: int, batch_nodes: int = 0,
+                 neighbor_cap: int = 0, seed: int = 0,
+                 length: Optional[int] = None):
+        super().__init__(g, K, seed=seed, length=length)
+        self.labeled = np.where(g.train_mask if g.train_mask is not None
+                                else np.ones(g.num_nodes, bool))[0]
+        if len(self.labeled) == 0:
+            raise ValueError(
+                "mini-batch views: the graph has no labeled nodes "
+                "(train_mask selects nothing) to sample batch targets from")
+        self.batch_nodes = batch_nodes or max(1, len(self.labeled) // 100)
+        self.neighbor_cap = neighbor_cap
+
+    def build(self, i: int,
+              builder: Optional[ViewBuilder] = None) -> GraphView:
+        rng = self.rng_for(i)
+        targets = rng.choice(self.labeled,
+                             size=min(self.batch_nodes, len(self.labeled)),
+                             replace=False)
+        builder = builder or ViewBuilder(self.g, self.K)
+        return builder.khop_view(targets, self.neighbor_cap, rng)
+
+
+class ClusterViewStream(ViewStream):
+    """Random cluster picks composed from one shared (read-only)
+    ClusterViewCache, one independent RNG stream per index."""
+
+    strategy = "cluster"
+
+    def __init__(self, g: Graph, K: int, clusters: np.ndarray,
+                 clusters_per_batch: int = 0, halo_hops: int = 0,
+                 seed: int = 0, length: Optional[int] = None):
+        super().__init__(g, K, seed=seed, length=length)
+        self.cache = ClusterViewCache(g, clusters, halo_hops)
+        C = self.cache.num_clusters
+        self.clusters_per_batch = min(
+            clusters_per_batch or max(1, C // 100), C)
+        self.train = (g.train_mask if g.train_mask is not None
+                      else np.ones(g.num_nodes, bool))
+
+    def build(self, i: int,
+              builder: Optional[ViewBuilder] = None) -> GraphView:
+        rng = self.rng_for(i)
+        chosen = rng.choice(self.cache.num_clusters,
+                            size=self.clusters_per_batch, replace=False)
+        builder = builder or ViewBuilder(self.g, self.K)
+        return builder.cluster_view(chosen, self.cache, self.train)

@@ -36,7 +36,8 @@ def train_gnn(dataset: str, model_name: str, strategy: str, steps: int,
               hidden: int = 64, lr: float = 1e-2, seed: int = 0,
               num_layers: int = 2, eval_every: int = 20,
               use_engine: Optional[int] = None,
-              partition_method: str = "1d_src") -> dict:
+              partition_method: str = "1d_src",
+              prefetch_workers: Optional[int] = None) -> dict:
     from repro.graph import make_dataset
     from repro.models import make_gnn
     from repro.core.mpgnn import loss_block, accuracy_block
@@ -95,6 +96,7 @@ def train_gnn(dataset: str, model_name: str, strategy: str, steps: int,
         t0 = time.perf_counter()
         out = trainer.fit(views, steps=steps, eval_every=eval_every,
                           eval_view=gbv, eval_mask=mask,
+                          prefetch_workers=prefetch_workers,
                           log_every=1, log=log.info)
         wall = time.perf_counter() - t0
         trainer.assert_compiled_once()
@@ -224,6 +226,10 @@ def main(argv=None):
                         "(requires that many jax devices)")
     g.add_argument("--partition-method", default="1d_src",
                    choices=["1d_src", "1d_dst", "vertex_cut"])
+    g.add_argument("--prefetch-workers", type=int, default=None,
+                   help="view-builder threads for the engine path "
+                        "(default: min(4, cores-1); deterministic for "
+                        "any count)")
     lm = sub.add_parser("lm")
     lm.add_argument("--arch", required=True)
     lm.add_argument("--steps", type=int, default=50)
@@ -237,7 +243,8 @@ def main(argv=None):
         out = train_gnn(args.dataset, args.model, args.strategy, args.steps,
                         hidden=args.hidden, num_layers=args.layers,
                         use_engine=args.engine_partitions or None,
-                        partition_method=args.partition_method)
+                        partition_method=args.partition_method,
+                        prefetch_workers=args.prefetch_workers)
         print(f"final test acc: {out['final_acc']:.4f} "
               f"({out['wall_s']:.1f}s)")
     else:

@@ -5,7 +5,12 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.clustering import label_propagation_clusters
+from repro.core.clustering import (hash_clusters,
+                                   label_propagation_clusters)
+from repro.core.subgraph import (bfs_layers, bfs_layers_loop,
+                                 khop_subgraph_view)
+from repro.core.views import (ClusterViewCache, ViewBuilder,
+                              cluster_view_recompute)
 from repro.graph import sbm_graph
 
 
@@ -23,3 +28,65 @@ def test_cluster_split_bounds_size(seed):
     sizes = np.bincount(cl)
     assert sizes.max() <= 40
     assert sizes.sum() == g.num_nodes
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 4), st.integers(0, 24))
+def test_bfs_vectorized_matches_loop(seed, depth, n_targets):
+    """Vectorized CSR-segment frontier expansion is bit-exact with the
+    per-node loop oracle — hop sets, dtypes, visited — for random graphs,
+    depths and target sets (including the empty set)."""
+    g = _g(seed % 13, n=150)
+    rng = np.random.default_rng(seed)
+    targets = rng.choice(g.num_nodes, size=n_targets, replace=False)
+    hops_v, vis_v = bfs_layers(g, targets, depth)
+    hops_l, vis_l = bfs_layers_loop(g, targets, depth)
+    assert len(hops_v) == len(hops_l) == depth + 1
+    for a, b in zip(hops_v, hops_l):
+        assert a.dtype == b.dtype
+        assert np.array_equal(a, b)
+    assert np.array_equal(vis_v, vis_l)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 3))
+def test_khop_builder_masks_match_loop_oracle(seed, K):
+    """ViewBuilder's buffer-reusing k-hop masks == the allocating
+    loop-BFS path, bit-exact on every mask."""
+    g = _g(seed % 13, n=150)
+    rng = np.random.default_rng(seed)
+    targets = rng.choice(g.num_nodes, size=10, replace=False)
+    na, ea, lm, _ = khop_subgraph_view(g, targets, K,
+                                       _bfs=bfs_layers_loop)
+    vb = ViewBuilder(g, K)
+    vb.khop_view(rng.choice(g.num_nodes, 5))   # dirty the buffers first
+    v = vb.khop_view(targets)
+    assert np.array_equal(v.node_active, na)
+    assert np.array_equal(v.edge_active, ea)
+    assert np.array_equal(v.loss_mask, lm)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(0, 2), st.integers(1, 5))
+def test_cluster_cache_matches_recompute(seed, halo, picks):
+    """Composed cached member/halo sets == per-step isin+halo recompute,
+    bit-exact on all masks (halo distributes over cluster unions)."""
+    g = _g(seed % 13, n=150)
+    clusters = hash_clusters(g, 8, seed=seed % 7)
+    cache = ClusterViewCache(g, clusters, halo)
+    rng = np.random.default_rng(seed)
+    chosen = rng.choice(cache.num_clusters, size=min(picks, 8),
+                        replace=False)
+    train = g.train_mask
+    member, active, loss = cluster_view_recompute(g, clusters, chosen,
+                                                  halo, train)
+    vb = ViewBuilder(g, 2)
+    v = vb.cluster_view(chosen, cache, train)
+    assert np.array_equal(
+        v.node_active,
+        np.broadcast_to(active.astype(np.float32), (2, g.num_nodes)))
+    assert np.array_equal(
+        v.edge_active,
+        np.broadcast_to((active[g.src] & active[g.dst])
+                        .astype(np.float32), (2, g.num_edges)))
+    assert np.array_equal(v.loss_mask, loss)

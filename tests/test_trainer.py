@@ -105,6 +105,49 @@ def test_assert_compiled_once_raises(setup):
 # ---------------------------------------------------------------------------
 
 
+def test_multi_stream_prefetch_deterministic(setup):
+    """The acceptance contract of the view engine: loss trajectory with
+    prefetch_workers=4 is bit-identical to workers=1 and to the
+    no-prefetch path (per-index RNG streams + in-order emit)."""
+    import jax
+    g, engine, clusters = setup
+    for strategy in ("mini", "cluster"):
+        ref_losses, ref_params = None, None
+        for kwargs in ({"prefetch": False},
+                       {"prefetch": True, "prefetch_workers": 1},
+                       {"prefetch": True, "prefetch_workers": 4}):
+            trainer = Trainer(engine, adam(1e-2), seed=0)
+            out = trainer.fit(_views(g, strategy, clusters, seed=13),
+                              steps=6, **kwargs)
+            if ref_losses is None:
+                ref_losses, ref_params = out["losses"], trainer.params
+                continue
+            assert out["losses"] == ref_losses, (strategy, kwargs)
+            for a, b in zip(jax.tree_util.tree_leaves(ref_params),
+                            jax.tree_util.tree_leaves(trainer.params)):
+                assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_multi_stream_pool_emits_in_index_order(setup):
+    """The pool path consumes the stream by index: the staged sequence
+    equals sequential construction even with many workers racing."""
+    g, engine, clusters = setup
+    stream = _views(g, "mini", clusters, seed=21)
+    # copy inside the loop: builder views alias the 2-slot buffer ring
+    expected = [shard_view(engine.plan, stream.build(i).copy_masks())
+                for i in range(5)]
+    from repro.core.trainer import _MultiStreamPrefetcher
+    stream.seek(0)
+    pool = _MultiStreamPrefetcher(
+        stream, lambda v: shard_view(engine.plan, v), steps=5, workers=4)
+    got = list(pool)
+    assert len(got) == 5
+    assert stream.cursor == 5
+    for a, b in zip(got, expected):
+        for k in a:
+            assert np.array_equal(a[k], b[k])
+
+
 def test_prefetch_on_off_identical(setup):
     g, engine, clusters = setup
     outs, params = [], []
@@ -191,6 +234,63 @@ def test_checkpoint_resume_midstream(setup, tmp_path):
     for a, b in zip(jax.tree_util.tree_leaves(straight.params),
                     jax.tree_util.tree_leaves(resumed.params)):
         assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_view_cursor_fast_forwards_stream(setup, tmp_path):
+    """restore() records the view-stream cursor from the checkpoint, and
+    the next fit() over a ViewStream fast-forwards the stream itself —
+    no caller-side ``next()`` skipping (the ROADMAP item)."""
+    import jax
+    g, engine, clusters = setup
+    ckdir = str(tmp_path / "ck")
+
+    straight = Trainer(engine, adam(1e-2), seed=0)
+    straight.fit(_views(g, "mini", clusters, seed=31), steps=8,
+                 checkpoint_every=4, checkpoint_dir=ckdir)
+    assert straight.view_cursor == 8
+
+    resumed = Trainer(engine, adam(1e-2), seed=99)   # different init
+    assert resumed.restore(ckdir, step=4) == 4
+    assert resumed.view_cursor == 4
+    # fresh stream, cursor 0 — fit seeks it to 4 automatically
+    resumed.fit(_views(g, "mini", clusters, seed=31), steps=4)
+    resumed.assert_compiled_once()
+    assert resumed.step_num == straight.step_num == 8
+    for a, b in zip(jax.tree_util.tree_leaves(straight.params),
+                    jax.tree_util.tree_leaves(resumed.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_cursor_consumed_by_any_fit(setup, tmp_path):
+    """A fit over a plain iterator consumes a pending restore cursor —
+    it must not stay armed and silently fast-forward a later stream."""
+    g, engine, clusters = setup
+    ckdir = str(tmp_path / "ck")
+    t = Trainer(engine, adam(1e-2), seed=0)
+    t.fit(_views(g, "mini", clusters, seed=41), steps=4,
+          checkpoint_every=4, checkpoint_dir=ckdir)
+    t2 = Trainer(engine, adam(1e-2), seed=0)
+    t2.restore(ckdir)
+    # legacy path: plain generator, caller fast-forwards by hand
+    legacy = iter([v for v in itertools.islice(
+        _views(g, "mini", clusters, seed=41), 5)][4:])
+    t2.fit(legacy, steps=1)
+    # a later unrelated stream must start at ITS cursor, not index 4
+    fresh = _views(g, "cluster", clusters, seed=42)
+    t2.fit(fresh, steps=2)
+    assert fresh.cursor == 2
+
+
+def test_global_stream_multiworker_staging(setup):
+    """The shared staging cache is safe under the worker pool: the static
+    global view never yields a half-written (None) staged batch."""
+    g, engine, clusters = setup
+    for _ in range(3):
+        trainer = Trainer(engine, adam(1e-2), seed=0)
+        out = trainer.fit(_views(g, "global", clusters), steps=5,
+                          prefetch=True, prefetch_workers=4)
+        assert len(out["losses"]) == 5
+        assert all(np.isfinite(l) for l in out["losses"])
 
 
 def test_checkpoint_latest_roundtrip(setup, tmp_path):

@@ -1,0 +1,285 @@
+"""Vectorized view-construction engine (repro.core.views + the vectorized
+``bfs_layers``): parity against the loop/recompute oracles, buffer-ring
+reuse, neighbor-cap sampling semantics, and ViewStream index stability.
+
+The hypothesis sweep lives in test_strategies_properties.py (dev extra).
+"""
+import numpy as np
+import pytest
+
+from repro.core.clustering import (cluster_members, hash_clusters,
+                                   label_propagation_clusters)
+from repro.core.strategies import (cluster_batch_views, mini_batch_views,
+                                   strategy_views)
+from repro.core.subgraph import (bfs_layers, bfs_layers_loop,
+                                 khop_subgraph_view)
+from repro.core.views import (ClusterViewCache, ClusterViewStream,
+                              GlobalViewStream, MiniBatchViewStream,
+                              ViewBuilder, cluster_view_recompute)
+from repro.graph import sbm_graph
+
+
+def _g(seed=0, n=300):
+    return sbm_graph(num_nodes=n, num_classes=4, feature_dim=8, p_in=0.05,
+                     p_out=0.005, seed=seed)
+
+
+def _assert_hops_equal(a, b):
+    assert len(a[0]) == len(b[0])
+    for ha, hb in zip(a[0], b[0]):
+        assert ha.dtype == hb.dtype
+        assert np.array_equal(ha, hb)
+    assert np.array_equal(a[1], b[1])   # visited
+
+
+# ---------------------------------------------------------------------------
+# vectorized bfs_layers == per-node loop oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("depth", [1, 2, 4])
+def test_bfs_parity(seed, depth):
+    g = _g(seed)
+    rng = np.random.default_rng(seed)
+    targets = rng.choice(g.num_nodes, size=12, replace=False)
+    _assert_hops_equal(bfs_layers(g, targets, depth),
+                       bfs_layers_loop(g, targets, depth))
+
+
+def test_bfs_parity_edge_cases():
+    g = _g(3)
+    # empty target set
+    empty = np.zeros(0, np.int64)
+    _assert_hops_equal(bfs_layers(g, empty, 3), bfs_layers_loop(g, empty, 3))
+    # disconnected targets: a node with no in-edges stalls the frontier
+    indeg = g.in_degree()
+    isolated = np.where(indeg == 0)[0]
+    targets = (isolated[:2] if len(isolated)
+               else np.array([int(np.argmin(indeg))]))
+    _assert_hops_equal(bfs_layers(g, targets, 3),
+                       bfs_layers_loop(g, targets, 3))
+    # duplicated targets collapse identically
+    dup = np.array([5, 5, 7, 7, 7, 9])
+    _assert_hops_equal(bfs_layers(g, dup, 2), bfs_layers_loop(g, dup, 2))
+
+
+def test_khop_masks_parity_loop_vs_vectorized():
+    g = _g(4)
+    targets = np.random.default_rng(0).choice(g.num_nodes, 20, replace=False)
+    for K in (1, 2, 3):
+        a = khop_subgraph_view(g, targets, K)
+        b = khop_subgraph_view(g, targets, K, _bfs=bfs_layers_loop)
+        for x, y in zip(a, b):
+            assert np.array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# neighbor-cap sampling
+# ---------------------------------------------------------------------------
+
+
+def test_neighbor_cap_requires_rng():
+    """The old bare ``assert rng is not None`` vanished under python -O;
+    both implementations now raise ValueError up front."""
+    g = _g(5)
+    with pytest.raises(ValueError, match="Generator"):
+        bfs_layers(g, np.arange(4), 2, neighbor_cap=3)
+    with pytest.raises(ValueError, match="Generator"):
+        bfs_layers_loop(g, np.arange(4), 2, neighbor_cap=3)
+    with pytest.raises(ValueError, match="Generator"):
+        khop_subgraph_view(g, np.arange(4), 2, neighbor_cap=3)
+
+
+def test_neighbor_cap_semantics():
+    g = _g(6)
+    targets = np.arange(6)
+    full_hops, full_visited = bfs_layers(g, targets, 2)
+    capped_hops, capped_visited = bfs_layers(
+        g, targets, 2, neighbor_cap=2, rng=np.random.default_rng(0))
+    # capped exploration is a subset of the full BFS
+    assert np.all(full_visited[capped_visited])
+    for hc, hf in zip(capped_hops, full_hops):
+        assert np.all(np.isin(hc, hf))
+    # a cap at/above the max in-degree is a no-op (bit-exact with full)
+    big = int(g.in_degree().max())
+    relaxed = bfs_layers(g, targets, 2, neighbor_cap=big,
+                         rng=np.random.default_rng(1))
+    _assert_hops_equal(relaxed, (full_hops, full_visited))
+    # same seed -> same sample (the vectorized draw is deterministic)
+    a = bfs_layers(g, targets, 2, neighbor_cap=2,
+                   rng=np.random.default_rng(7))
+    b = bfs_layers(g, targets, 2, neighbor_cap=2,
+                   rng=np.random.default_rng(7))
+    _assert_hops_equal(a, b)
+
+
+def test_neighbor_cap_bounds_per_node_fanin():
+    """Each frontier node contributes at most ``cap`` in-neighbors: hop 1
+    from a single target can never exceed cap new nodes."""
+    g = _g(7)
+    deg = g.in_degree()
+    u = int(np.argmax(deg))
+    assert deg[u] > 3
+    hops, _ = bfs_layers(g, np.array([u]), 1, neighbor_cap=3,
+                         rng=np.random.default_rng(0))
+    # hop set includes the target itself
+    assert len(hops[1]) <= 1 + 3
+
+
+# ---------------------------------------------------------------------------
+# ViewBuilder: parity + buffer-ring reuse
+# ---------------------------------------------------------------------------
+
+
+def test_builder_khop_parity_and_ring_reuse():
+    g = _g(8)
+    vb = ViewBuilder(g, 2, slots=2)
+    buffer_ids = set()
+    for seed in range(5):
+        t = np.random.default_rng(seed).choice(g.num_nodes, 16,
+                                               replace=False)
+        na, ea, lm, _ = khop_subgraph_view(g, t, 2)
+        v = vb.khop_view(t)
+        assert np.array_equal(v.node_active, na)
+        assert np.array_equal(v.edge_active, ea)
+        assert np.array_equal(v.loss_mask, lm)
+        buffer_ids.add(id(v.node_active))
+    # no fresh (K, N) allocations: the ring's 2 slots were reused
+    assert len(buffer_ids) == 2
+    assert vb.builds == 5
+
+
+@pytest.mark.parametrize("halo", [0, 1, 2])
+def test_cluster_cache_parity(halo):
+    g = _g(9)
+    clusters = label_propagation_clusters(g, max_cluster_size=60, seed=0)
+    cache = ClusterViewCache(g, clusters, halo)
+    vb = ViewBuilder(g, 2)
+    train = g.train_mask
+    rng = np.random.default_rng(halo)
+    for _ in range(5):
+        chosen = rng.choice(cache.num_clusters, size=3, replace=False)
+        member, active, loss = cluster_view_recompute(g, clusters, chosen,
+                                                      halo, train)
+        v = vb.cluster_view(chosen, cache, train)
+        assert np.array_equal(
+            v.node_active,
+            np.broadcast_to(active.astype(np.float32),
+                            (2, g.num_nodes)))
+        assert np.array_equal(
+            v.edge_active,
+            np.broadcast_to((active[g.src] & active[g.dst])
+                            .astype(np.float32), (2, g.num_edges)))
+        assert np.array_equal(v.loss_mask, loss)
+
+
+def test_cluster_cache_loss_fallback_parity():
+    """When no chosen member is labeled, loss falls back to all members —
+    in both the cached and the recompute path."""
+    g = _g(10, n=120)
+    clusters = hash_clusters(g, 6, seed=0)
+    no_train = np.zeros(g.num_nodes, bool)
+    cache = ClusterViewCache(g, clusters, 1)
+    vb = ViewBuilder(g, 2)
+    chosen = np.array([0, 3])
+    member, active, loss = cluster_view_recompute(g, clusters, chosen, 1,
+                                                  no_train)
+    v = vb.cluster_view(chosen, cache, no_train)
+    assert loss.sum() > 0
+    assert np.array_equal(v.loss_mask, loss)
+
+
+def test_cluster_members_partition():
+    labels = np.array([2, 0, 1, 0, 2, 2, 1])
+    members = cluster_members(labels)
+    assert [m.tolist() for m in members] == [[1, 3], [2, 6], [0, 4, 5]]
+
+
+# ---------------------------------------------------------------------------
+# ViewStreams: index-stable, order-independent construction
+# ---------------------------------------------------------------------------
+
+
+def test_mini_stream_order_independent():
+    g = _g(11)
+    s = MiniBatchViewStream(g, 2, batch_nodes=16, seed=3)
+    out_of_order = [s.build(i).copy_masks() for i in (4, 0, 2)]
+    in_order = {i: s.build(i).copy_masks() for i in range(5)}
+    for v, i in zip(out_of_order, (4, 0, 2)):
+        assert np.array_equal(v.node_active, in_order[i].node_active)
+        assert np.array_equal(v.loss_mask, in_order[i].loss_mask)
+    # iterator protocol walks the same indices and tracks the cursor
+    it = iter(s)
+    assert s.cursor == 0
+    first = next(it).copy_masks()
+    assert s.cursor == 1
+    assert np.array_equal(first.edge_active, in_order[0].edge_active)
+    s.seek(4)
+    assert np.array_equal(next(it).copy_masks().loss_mask,
+                          in_order[4].loss_mask)
+
+
+def test_cluster_stream_order_independent():
+    g = _g(12)
+    clusters = label_propagation_clusters(g, max_cluster_size=60, seed=0)
+    s = ClusterViewStream(g, 2, clusters, clusters_per_batch=2,
+                          halo_hops=1, seed=5)
+    a = s.build(9).copy_masks()
+    b = s.build(9, ViewBuilder(g, 2)).copy_masks()  # private builder, same i
+    assert np.array_equal(a.node_active, b.node_active)
+    assert a.meta["clusters"] == b.meta["clusters"]
+
+
+def test_stream_length_exhausts():
+    g = _g(13)
+    s = strategy_views(g, "mini", 2, seed=0, steps=3, batch_nodes=8)
+    assert len(list(s)) == 3
+    with pytest.raises(StopIteration):
+        next(s)
+
+
+def test_stream_iterator_yields_detached_views():
+    """next() on a stream detaches from the builder ring (the legacy
+    generator contract) — buffering several views is safe."""
+    g = _g(20)
+    s = strategy_views(g, "mini", 2, seed=0, batch_nodes=8)
+    buffered = [next(s) for _ in range(4)]
+    assert len({id(v.node_active) for v in buffered}) == 4
+    replay = [s.build(i).copy_masks() for i in range(4)]
+    for v, r in zip(buffered, replay):
+        assert np.array_equal(v.node_active, r.node_active)
+        assert np.array_equal(v.loss_mask, r.loss_mask)
+
+
+def test_global_stream_is_static():
+    g = _g(14)
+    s = strategy_views(g, "global", 2)
+    assert isinstance(s, GlobalViewStream)
+    assert s.build(0) is s.build(99)
+    assert s.make_builder() is None
+
+
+def test_mini_stream_empty_labeled_raises():
+    g = _g(15, n=60)
+    g.train_mask = np.zeros(g.num_nodes, bool)
+    with pytest.raises(ValueError, match="no labeled nodes"):
+        MiniBatchViewStream(g, 2, batch_nodes=4)
+
+
+# ---------------------------------------------------------------------------
+# legacy generators keep their contract (detached arrays, same semantics)
+# ---------------------------------------------------------------------------
+
+
+def test_generators_yield_detached_views():
+    g = _g(16)
+    clusters = hash_clusters(g, 8, seed=0)
+    mvs = list(mini_batch_views(g, 2, batch_nodes=8, seed=0, steps=3))
+    assert len({id(v.node_active) for v in mvs}) == 3
+    # earlier views are not clobbered by later builds
+    snap = mvs[0].node_active.copy()
+    assert np.array_equal(snap, mvs[0].node_active)
+    cvs = list(cluster_batch_views(g, 2, clusters, clusters_per_batch=2,
+                                   halo_hops=1, seed=0, steps=3))
+    assert len({id(v.edge_active) for v in cvs}) == 3
