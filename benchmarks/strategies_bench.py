@@ -16,13 +16,21 @@ expansion vs the buffer-reusing ViewBuilder for mini-batch views, and the
 per-step ``np.isin``+halo recompute vs the precomputed ClusterViewCache
 for cluster views.
 
+A ``compact_views`` section (PR 6 tentpole) scales the graph at a fixed
+fan-out (batch size + neighbor cap, degree held constant) and compares
+the dense mask path against the compact sampled-subgraph path: per-view
+host bytes and build time (dense grows with N, compact must stay ~flat)
+and end-to-end steps/sec through the bucketed CompactTrainer (dense
+full-graph staging vs size-bucketed compact blocks).
+
 Writes ``BENCH_strategies.json``. ``--smoke`` is the CI lane: tiny shapes
 plus the contracts asserted — exactly one trace of the train step across
 N steps of *all three* strategies, bit-exact parity of the vectorized
 ``shard_view`` with the per-partition loop, bit-exact parity of the
-vectorized/cached view builders with their loop/recompute oracles, and
-bit-identical trainer loss trajectories for prefetch_workers in {1, 4}
-and prefetch disabled (multi-stream determinism).
+vectorized/cached view builders with their loop/recompute oracles,
+bit-exact compact-vs-dense masks plus the once-per-bucket trace count,
+and bit-identical trainer loss trajectories for prefetch_workers in
+{1, 4} and prefetch disabled (multi-stream determinism).
 
 Standalone (sets fake host devices before importing jax):
 
@@ -191,6 +199,150 @@ def _view_build_section(g, K: int, clusters, smoke: bool) -> dict:
     }
 
 
+def _compact_views_section(smoke: bool) -> dict:
+    """Dense masks vs compact sampled-subgraph views as the graph grows
+    at a fixed fan-out. Measures per-view host bytes, per-view build time
+    (builders timed directly; target draws are shared setup) and
+    steps/sec through the bucketed CompactTrainer. Compact-vs-dense mask
+    parity and the once-per-bucket trace contract are hard-asserted in
+    smoke AND full mode."""
+    import numpy as np
+
+    from benchmarks.common import emit
+    from repro.config import GNNConfig
+    from repro.core.strategies import strategy_views
+    from repro.core.trainer import CompactTrainer
+    from repro.core.views import ViewBuilder
+    from repro.graph import sbm_graph
+    from repro.models import make_gnn
+    from repro.optim import adam
+
+    sizes = [300, 900] if smoke else [1000, 3200, 10000]
+    # fan-out kept small enough that the sampled view saturates well below
+    # the largest graph (16 targets, cap 4, K=2 -> <= ~336 nodes): past
+    # saturation the per-view cost curve separates from the graph size
+    K, bsz, cap = 2, 16, 4
+    n_views = 4 if smoke else 12
+    steps = 3 if smoke else 10
+    repeats = 2 if smoke else 3
+    feat = 16
+    cfg = GNNConfig(model="gcn", num_layers=K, hidden_dim=16,
+                    num_classes=4, feature_dim=feat)
+    model = make_gnn(cfg)
+    opt = adam(1e-2)
+    scales = []
+    for N in sizes:
+        # p ~ 1/N holds the degree fixed as N grows: the view the fan-out
+        # samples stays the same size while the dense (K,N)/(K,E) masks
+        # track the graph — exactly the scaling the compact path removes
+        g = sbm_graph(num_nodes=N, num_classes=4, feature_dim=feat,
+                      p_in=24.0 / N, p_out=2.4 / N, seed=0,
+                      name=f"scale{N}").add_self_loops()
+
+        # -- parity contract (bit-exact masks from the same index) ----------
+        dense_s = strategy_views(g, "mini", K, seed=0, batch_nodes=bsz,
+                                 neighbor_cap=cap)
+        comp_s = strategy_views(g, "mini", K, seed=0, batch_nodes=bsz,
+                                neighbor_cap=cap, compact=True)
+        for i in range(2):
+            dv = dense_s.build(i).copy_masks()
+            cv = comp_s.build(i)
+            cd = cv.to_dense()
+            assert np.array_equal(cd.node_active, dv.node_active), N
+            assert np.array_equal(cd.edge_active, dv.edge_active), N
+            assert np.array_equal(cd.loss_mask, dv.loss_mask), N
+
+        # -- per-view build time + host bytes ------------------------------
+        rng = np.random.default_rng(0)
+        labeled = np.where(g.train_mask)[0]
+        targets = [rng.choice(labeled, size=min(bsz, len(labeled)),
+                              replace=False) for _ in range(n_views)]
+        dense_vb = ViewBuilder(g, K)
+        compact_vb = ViewBuilder(g, K, compact=True)
+        walls = {"dense": float("inf"), "compact": float("inf")}
+        for _ in range(max(2, repeats)):      # first pass warms scratch
+            t0 = time.perf_counter()
+            for t in targets:
+                dense_vb.khop_view(t, cap, np.random.default_rng(1))
+            walls["dense"] = min(walls["dense"], time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            for t in targets:
+                compact_vb.khop_compact(t, cap, np.random.default_rng(1))
+            walls["compact"] = min(walls["compact"],
+                                   time.perf_counter() - t0)
+        cv = compact_vb.khop_compact(targets[0], cap,
+                                     np.random.default_rng(1))
+        dense_bytes = 4 * (K * g.num_nodes + K * g.num_edges
+                           + g.num_nodes)
+
+        # -- steps/sec: CompactTrainer over dense vs compact streams -------
+        sps = {}
+        for compact in (False, True):
+            trainer = CompactTrainer(model, g, opt, seed=0)
+
+            def stream():
+                return strategy_views(g, "mini", K, seed=3,
+                                      batch_nodes=bsz, neighbor_cap=cap,
+                                      compact=compact)
+
+            # warm the full step sequence once: every bucket the timed run
+            # touches is compiled before timing starts
+            trainer.fit(stream(), steps=steps, prefetch=False)
+            wall = float("inf")
+            for _ in range(repeats):
+                trainer.reset(seed=0)
+                t0 = time.perf_counter()
+                trainer.fit(stream(), steps=steps, prefetch=False)
+                wall = min(wall, time.perf_counter() - t0)
+            # the bucket-trace contract: one trace per touched shape,
+            # repeat epochs added zero
+            trainer.assert_compiled_per_bucket()
+            assert (trainer.trace_counts["train_step"]
+                    == len(trainer.buckets_touched))
+            sps[compact] = steps / wall
+        emit(f"strategies/compact_views_N{N}",
+             walls["compact"] / n_views * 1e6,
+             f"dense_us={walls['dense'] / n_views * 1e6:.1f};"
+             f"bytes={cv.nbytes()}(dense {dense_bytes});"
+             f"sps={sps[True]:.2f}(dense {sps[False]:.2f})")
+        scales.append({
+            "num_nodes": g.num_nodes, "num_edges": g.num_edges,
+            "view_nodes": cv.num_nodes, "view_edges": cv.num_edges,
+            "dense_bytes_per_view": dense_bytes,
+            "compact_bytes_per_view": cv.nbytes(),
+            "dense_ms_per_view": round(walls["dense"] / n_views * 1e3, 4),
+            "compact_ms_per_view": round(
+                walls["compact"] / n_views * 1e3, 4),
+            "dense_views_per_sec": round(n_views / walls["dense"], 1),
+            "compact_views_per_sec": round(n_views / walls["compact"], 1),
+            "steps_per_sec_dense": round(sps[False], 3),
+            "steps_per_sec_compact": round(sps[True], 3),
+        })
+    emit("strategies/contract_compact_parity", 0.0,
+         "compact.to_dense()==dense;once-per-bucket")
+
+    first, last = scales[0], scales[-1]
+
+    def growth(key):
+        return round(last[key] / max(first[key], 1e-9), 2)
+
+    return {
+        "sizes": sizes, "K": K, "batch_nodes": bsz, "neighbor_cap": cap,
+        "n_views": n_views, "steps": steps, "scales": scales,
+        "n_growth": growth("num_nodes"),
+        "dense_bytes_growth": growth("dense_bytes_per_view"),
+        "compact_bytes_growth": growth("compact_bytes_per_view"),
+        "dense_build_growth": growth("dense_ms_per_view"),
+        "compact_build_growth": growth("compact_ms_per_view"),
+        "compact_bytes_flat_2x": bool(
+            growth("compact_bytes_per_view") <= 2.0),
+        "compact_build_flat_2x": bool(
+            growth("compact_ms_per_view") <= 2.0),
+        "compact_sps_ge_dense_at_largest": bool(
+            last["steps_per_sec_compact"] >= last["steps_per_sec_dense"]),
+    }
+
+
 def _assert_multistream_determinism(trainer, views_for) -> None:
     """The multi-stream prefetch contract: loss trajectories are
     bit-identical for prefetch_workers in {1, 4} and prefetch off."""
@@ -281,6 +433,9 @@ def strategies(smoke: bool = False, out_json: str = "BENCH_strategies.json",
     # -- host-side view construction: loop vs vectorized vs cached -----------
     view_build = _view_build_section(g, 2, clusters, smoke)
 
+    # -- compact sampled-subgraph views vs dense masks at growing N ----------
+    compact_views = _compact_views_section(smoke)
+
     rows, summary = [], {}
     for backend in ("reference", "csc"):
         cfg = GNNConfig(model="gcn", num_layers=2, hidden_dim=hidden,
@@ -355,6 +510,7 @@ def strategies(smoke: bool = False, out_json: str = "BENCH_strategies.json",
         "rows": rows,
         "summary": summary,
         "view_build": view_build,
+        "compact_views": compact_views,
         # headline: total wall over all strategy x backend cells — the
         # per-cell margins for the cheap-host-prep cells sit near the
         # 2-core box's timing noise, the aggregate does not

@@ -4,9 +4,15 @@ proxies (Tables 2-4 in miniature).
 
 Since PR 4 all three strategies run through one :class:`repro.core.Trainer`
 over a 4-worker hybrid-parallel engine: ``trainer.reset()`` between
-strategies keeps the compiled step, so the whole comparison — 3 strategies,
-eval included — traces the train step exactly once
+strategies keeps the compiled step, so the whole comparison — all
+strategies, eval included — traces the train step exactly once
 (``assert_compiled_once``).
+
+PR 6's compact sampled-subgraph views ride the same engine: the
+``compact`` rows feed :class:`~repro.core.views.CompactView` streams
+through the identical compiled step (an O(view) shard scatter instead of
+dense-mask gathers) — same trajectory, a fraction of the per-view host
+bytes.
 
     PYTHONPATH=src python examples/strategy_comparison.py
 """
@@ -29,10 +35,22 @@ from repro.models import make_gnn
 from repro.optim import adam
 
 
-def run(trainer, g, clusters, strategy: str, steps: int):
+def _view_host_bytes(v) -> int:
+    """Per-view host footprint: compact views own O(view) id arrays, a
+    dense view owns (K, N)/(K, E) masks, the global view owns one (N,)."""
+    if hasattr(v, "nbytes"):            # CompactView
+        return v.nbytes()
+    na = v.node_active.nbytes if v.node_active is not None else 0
+    ea = v.edge_active.nbytes if v.edge_active is not None else 0
+    return na + ea + v.loss_mask.nbytes
+
+
+def run(trainer, g, clusters, strategy: str, steps: int,
+        compact: bool = False):
     trainer.reset(seed=0)
     views = strategy_views(g, strategy, K=2, seed=0, batch_nodes=64,
-                           clusters=clusters, clusters_per_batch=4)
+                           clusters=clusters, clusters_per_batch=4,
+                           compact=compact)
     t0 = time.perf_counter()
     trainer.fit(views, steps=steps)     # multi-stream prefetch pool
     wall = time.perf_counter() - t0
@@ -40,13 +58,16 @@ def run(trainer, g, clusters, strategy: str, steps: int):
                            mask=g.test_mask.astype(np.float32))
     # view i is a pure function of (seed, i), so the exact views the run
     # consumed can be replayed off the timed path to measure the peak
-    # active-set size (Table 4's memory proxy)
+    # active-set size (Table 4's memory proxy) and per-view host bytes
     builder = views.make_builder()
-    peak = max((views.build(i, builder).active_counts()["active_nodes"]
-                for i in range(views.cursor)), default=g.num_nodes)
-    return {"strategy": strategy, "acc": acc,
-            "ms_per_step": wall / steps * 1e3,
-            "peak_active_nodes": peak}
+    replayed = [views.build(i, builder) for i in range(views.cursor)]
+    peak = max((v.active_counts()["active_nodes"] for v in replayed),
+               default=g.num_nodes)
+    view_kb = max((_view_host_bytes(v) / 1024 for v in replayed),
+                  default=_view_host_bytes(global_batch_view(g, 2)) / 1024)
+    return {"strategy": strategy + ("+compact" if compact else ""),
+            "acc": acc, "ms_per_step": wall / steps * 1e3,
+            "peak_active_nodes": peak, "view_kb": view_kb}
 
 
 def main():
@@ -69,15 +90,18 @@ def main():
     # the first strategy's ms/step isn't charged for it
     trainer.fit(strategy_views(g, "global", K=2), steps=2)
 
-    print(f"{'strategy':10s} {'test_acc':>8s} {'ms/step':>8s} "
-          f"{'peak_active':>11s}")
-    for strategy in ("global", "mini", "cluster"):
-        r = run(trainer, g, clusters, strategy, steps=120)
-        print(f"{r['strategy']:10s} {r['acc']:8.4f} "
-              f"{r['ms_per_step']:8.1f} {r['peak_active_nodes']:11d}")
+    print(f"{'strategy':16s} {'test_acc':>8s} {'ms/step':>8s} "
+          f"{'peak_active':>11s} {'view_kb':>8s}")
+    for strategy, compact in (("global", False), ("mini", False),
+                              ("cluster", False), ("mini", True),
+                              ("cluster", True)):
+        r = run(trainer, g, clusters, strategy, steps=120, compact=compact)
+        print(f"{r['strategy']:16s} {r['acc']:8.4f} "
+              f"{r['ms_per_step']:8.1f} {r['peak_active_nodes']:11d} "
+              f"{r['view_kb']:8.1f}")
     trainer.assert_compiled_once()
-    print(f"one compiled train step served all three strategies "
-          f"({trainer.trace_counts['train_step']} trace, P={P}).")
+    print(f"one compiled train step served every strategy, dense AND "
+          f"compact ({trainer.trace_counts['train_step']} trace, P={P}).")
 
 
 if __name__ == "__main__":

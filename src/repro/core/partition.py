@@ -53,6 +53,10 @@ class PartitionPlan:
     # (block_n, block_e) — built once per partitioning, reused by every
     # batch/view the engine stages (paper §4.2 reused indexing)
     _csc_plans: dict = field(default_factory=dict, repr=False)
+    # cached inverse maps (global id -> local slot), built on first use by
+    # the compact shard path (shard_view over CompactView scatters a few
+    # thousand ids instead of gathering all N / all E per step)
+    _locators: dict = field(default_factory=dict, repr=False)
 
     @property
     def n_m_pad(self) -> int:
@@ -84,6 +88,39 @@ class PartitionPlan:
             self._csc_plans[key] = build_csc_plans_stacked(
                 self.dst_local, n_tot, block_n, block_e)
         return self._csc_plans[key]
+
+    def node_locator(self) -> np.ndarray:
+        """(N,) int64: master slot of each global node on its owner
+        partition (``masters[owner[v], node_locator()[v]] == v``)."""
+        if "node" not in self._locators:
+            valid = self.master_mask > 0
+            cols = np.broadcast_to(
+                np.arange(self.n_m_pad, dtype=np.int64),
+                self.masters.shape)
+            slot = np.zeros(int(self.masters.max()) + 1, np.int64)
+            slot[self.masters[valid].astype(np.int64)] = cols[valid]
+            self._locators["node"] = slot
+        return self._locators["node"]
+
+    def edge_locator(self):
+        """(part, slot): for each global edge id, its partition and edge
+        slot there (``edge_orig[part[e], slot[e]] == e``)."""
+        if "edge" not in self._locators:
+            valid = self.edge_mask > 0
+            M = int(self.edge_orig[valid].max()) + 1 if valid.any() else 1
+            part = np.zeros(M, np.int64)
+            slot = np.zeros(M, np.int64)
+            rows = np.broadcast_to(
+                np.arange(self.P, dtype=np.int64)[:, None],
+                self.edge_orig.shape)
+            cols = np.broadcast_to(
+                np.arange(self.e_pad, dtype=np.int64),
+                self.edge_orig.shape)
+            ids = self.edge_orig[valid].astype(np.int64)
+            part[ids] = rows[valid]
+            slot[ids] = cols[valid]
+            self._locators["edge"] = (part, slot)
+        return self._locators["edge"]
 
 
 @dataclass

@@ -26,7 +26,7 @@ import numpy as np
 
 from repro.graph.csr import Graph
 from repro.core.views import (ClusterViewCache, ClusterViewStream,
-                              GlobalViewStream, GraphView,
+                              CompactView, GlobalViewStream, GraphView,
                               MiniBatchViewStream, ViewBuilder, ViewStream)
 
 __all__ = [
@@ -46,7 +46,9 @@ def global_batch_view(g: Graph, K: int) -> GraphView:
     loss = (g.train_mask if g.train_mask is not None
             else np.ones(g.num_nodes, bool)).astype(np.float32)
     return GraphView(g, K, "global", None, None, loss,
-                     {"targets": int(loss.sum())})
+                     {"targets": int(loss.sum()),
+                      "active_nodes": int(g.num_nodes),
+                      "active_edges": int(g.num_edges)})
 
 
 def mini_batch_views(g: Graph, K: int, batch_nodes: int = 0,
@@ -115,7 +117,9 @@ def strategy_views(g: Graph, strategy: str, K: int, seed: int = 0,
                    batch_nodes: int = 0,
                    clusters: Optional[np.ndarray] = None,
                    clusters_per_batch: int = 0,
-                   halo_hops: int = 1) -> ViewStream:
+                   halo_hops: int = 1,
+                   neighbor_cap: int = 0,
+                   compact: bool = False) -> ViewStream:
     """One entry point for all three strategies (paper §2.3): returns the
     indexable :class:`ViewStream` the Trainer / examples / benchmarks
     drive (also a plain iterator, so ``next()`` keeps working). View i is
@@ -123,6 +127,11 @@ def strategy_views(g: Graph, strategy: str, K: int, seed: int = 0,
     multi-stream prefetch deterministic and the stream cursor
     checkpointable. The ``cluster`` strategy computes label-propagation
     communities when ``clusters`` is not supplied.
+
+    ``compact=True`` makes the mini/cluster streams yield
+    :class:`repro.core.views.CompactView` (relabeled sampled subgraphs;
+    same node/edge sets and RNG draws as the dense views, O(view) host
+    cost). The global strategy is already the whole graph and ignores it.
     """
     if strategy == "global":
         # the global view is static — every index yields the SAME object
@@ -130,7 +139,9 @@ def strategy_views(g: Graph, strategy: str, K: int, seed: int = 0,
         return GlobalViewStream(global_batch_view(g, K), length=steps)
     if strategy == "mini":
         return MiniBatchViewStream(g, K, batch_nodes=batch_nodes,
-                                   seed=seed, length=steps)
+                                   neighbor_cap=neighbor_cap,
+                                   seed=seed, length=steps,
+                                   compact=compact)
     if strategy == "cluster":
         if clusters is None:
             from repro.core.clustering import label_propagation_clusters
@@ -139,7 +150,7 @@ def strategy_views(g: Graph, strategy: str, K: int, seed: int = 0,
         return ClusterViewStream(g, K, clusters,
                                  clusters_per_batch=clusters_per_batch,
                                  halo_hops=halo_hops, seed=seed,
-                                 length=steps)
+                                 length=steps, compact=compact)
     raise ValueError(f"unknown strategy {strategy!r} "
                      "(expected global|mini|cluster)")
 
@@ -161,6 +172,8 @@ def shard_view(plan, view: GraphView) -> dict:
     O(1) Python regardless of P — this is the per-step hot path the
     Trainer's prefetch workers run (see :mod:`repro.core.trainer`).
     """
+    if isinstance(view, CompactView):
+        return _shard_compact(plan, view)
     P = plan.P
     K = view.K
     n_m_pad = plan.masters.shape[1]
@@ -184,6 +197,41 @@ def shard_view(plan, view: GraphView) -> dict:
     return {"node_active": np.ascontiguousarray(node_active, np.float32),
             "edge_active": np.ascontiguousarray(edge_active, np.float32),
             "loss_mask": np.ascontiguousarray(loss, np.float32)}
+
+
+def _shard_compact(plan, view: CompactView) -> dict:
+    """Sharded masks straight from a CompactView's id lists.
+
+    Scatters only the view's |nodes| + |edges| entries into zeroed
+    per-partition buffers via the plan's cached inverse locators —
+    O(view) host work per step instead of the dense path's O(P·K·N)
+    gathers. Bit-exact against ``shard_view(plan, view.to_dense())``:
+    slots the view never touches stay zero, which is exactly what the
+    dense path's ``* master_mask`` / ``* edge_mask`` produce.
+    """
+    P, K = plan.P, view.K
+    n_m_pad = plan.masters.shape[1]
+    e_pad = plan.src_local.shape[1]
+    node_active = np.zeros((P, K, n_m_pad), np.float32)
+    edge_active = np.zeros((P, K, e_pad), np.float32)
+    loss = np.zeros((P, n_m_pad), np.float32)
+    nslot = plan.node_locator()
+    owner = plan.owner
+    epart, eslot = plan.edge_locator()
+    lidx = np.flatnonzero(view.loss_local)
+    if len(lidx):
+        ln = view.nodes[lidx]
+        loss[owner[ln], nslot[ln]] = view.loss_local[lidx]
+    off = view.hop_offsets
+    for k in range(K):
+        act = view.nodes[: int(off[K - 1 - k])]
+        if len(act):
+            node_active[owner[act], k, nslot[act]] = 1.0
+        ids = view.edge_ids[view.edge_layer_mask(k)]
+        if len(ids):
+            edge_active[epart[ids], k, eslot[ids]] = 1.0
+    return {"node_active": node_active, "edge_active": edge_active,
+            "loss_mask": loss}
 
 
 def shard_view_loop(plan, view: GraphView) -> dict:

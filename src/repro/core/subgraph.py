@@ -91,6 +91,71 @@ def bfs_layers(g: Graph, targets: np.ndarray, depth: int,
     return hops, visited
 
 
+def bfs_layers_fresh(g: Graph, targets: np.ndarray, depth: int,
+                     neighbor_cap: int = 0,
+                     rng: Optional[np.random.Generator] = None,
+                     stamp: Optional[np.ndarray] = None,
+                     stamp_val: int = 0):
+    """Fresh-per-hop node sets ``[F_0=targets, F_1, ..., F_depth]`` where
+    F_d holds the nodes *first* reached at hop d (sorted) — the hop-ordered
+    relabeling a :class:`repro.core.views.CompactView` is built from.
+
+    Unlike :func:`bfs_layers` this never materializes a full-width array
+    per hop: dedup runs through ``np.unique`` over the expanded candidates
+    plus a caller-owned **stamp** array (``stamp[v] == stamp_val`` marks v
+    visited in *this* build), so per-view host work is O(view edges), not
+    O(K·N). The cumulative union of F_0..F_d is bit-identical to
+    ``bfs_layers``' ``hops[d]``, and with a ``neighbor_cap`` both consume
+    the exact same rng draws — sampled sets match bit-for-bit.
+
+    ``stamp`` defaults to a fresh (N,) array (one O(N) allocation); reuse
+    it across builds with a fresh ``stamp_val`` each time to amortize.
+    """
+    _require_rng(neighbor_cap, rng)
+    indptr, order = g.csc()
+    src = g.src
+    if stamp is None:
+        stamp = np.full(g.num_nodes, -1, np.int64)
+        stamp_val = 0
+    frontier = np.unique(targets).astype(np.int64)
+    stamp[frontier] = stamp_val
+    fresh = [frontier]
+    reached = frontier
+    for _ in range(depth):
+        eidx = _expand_frontier(indptr, order, reached, neighbor_cap, rng)
+        if len(eidx):
+            cand = src[eidx]
+            new = np.unique(cand[stamp[cand] != stamp_val]).astype(np.int64)
+        else:
+            new = np.zeros(0, np.int64)
+        stamp[new] = stamp_val
+        fresh.append(new)
+        reached = new
+        if len(new) == 0:
+            # keep remaining fresh sets empty (hop sets stalled)
+            for _ in range(depth - len(fresh) + 1):
+                fresh.append(np.zeros(0, np.int64))
+            break
+    return fresh, stamp
+
+
+def stamped_in_edges(g: Graph, dst_nodes: np.ndarray, stamp: np.ndarray,
+                     stamp_val: int) -> np.ndarray:
+    """Global edge ids of every in-edge of ``dst_nodes`` whose src is
+    stamped (``stamp[src] == stamp_val``), grouped by ``dst_nodes`` order.
+    O(in-edges of dst_nodes) — the compact view's edge-extraction pass.
+
+    The src filter is what makes neighbor-capped compact views match the
+    dense masks: a sampled view's edge set is {(u, v) : v within K-1 hops,
+    u *visited*}, and with a cap some in-neighbors of v were never
+    sampled."""
+    indptr, order = g.csc()
+    eidx = _expand_frontier(indptr, order, dst_nodes, 0, None)
+    if len(eidx) == 0:
+        return eidx
+    return eidx[stamp[g.src[eidx]] == stamp_val]
+
+
 def _expand_frontier(indptr: np.ndarray, order: np.ndarray,
                      reached: np.ndarray, neighbor_cap: int,
                      rng) -> np.ndarray:

@@ -52,7 +52,7 @@ import numpy as np
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.core.strategies import GraphView, shard_view
-from repro.core.views import ViewStream
+from repro.core.views import CompactBlockBuilder, ViewStream
 
 
 class RetraceError(AssertionError):
@@ -493,3 +493,186 @@ class Trainer:
             raise RetraceError(
                 f"eval infer was traced {self.trace_counts['infer']} "
                 "times (expected at most 1)")
+
+
+class CompactTrainer:
+    """Single-process trainer over size-bucketed compact blocks.
+
+    Where :class:`Trainer` fixes the step's shapes with a PartitionPlan,
+    this trainer fixes them with a :class:`~repro.core.views.BucketSpec`:
+    every :class:`~repro.core.views.CompactView` is staged by a
+    :class:`~repro.core.views.CompactBlockBuilder` into one of a small
+    fixed menu of padded ``(n_pad, e_pad)`` shapes, so device compute and
+    memory scale with the *view* while the jitted step still compiles at
+    most once per bucket — the bucketed analog of the compiled-once
+    contract, certified by :meth:`assert_compiled_per_bucket`.
+
+    Dense GraphViews pass straight through (full-graph shape = its own
+    bucket), so the same loop drives the dense parity oracle.
+    """
+
+    def __init__(self, model, g, opt, params: Optional[Any] = None,
+                 seed: int = 0, buckets=None, slots: int = 2,
+                 gcn_norm: bool = True, prefetch_depth: int = 2):
+        from repro.core.mpgnn import accuracy_block, loss_block
+        self.model = model
+        self.g = g
+        self.opt = opt
+        backend = getattr(model, "aggregate_backend", "reference")
+        self.stager = CompactBlockBuilder(
+            g, model.K, buckets=buckets, slots=slots, gcn_norm=gcn_norm,
+            csc_plan=(backend == "csc"))
+        self.buckets = self.stager.buckets
+        if params is None:
+            params = model.init(jax.random.PRNGKey(seed),
+                                g.node_features.shape[1])
+        self.params = params
+        self.opt_state = opt.init(params)
+        self.step_num = 0
+        self.history: list = []
+        self.prefetch_depth = prefetch_depth
+        self.trace_counts = {"train_step": 0}
+        # (n_pad, e_pad) shapes actually staged — the denominator of the
+        # once-per-bucket contract
+        self.buckets_touched: set = set()
+        # staging mutates per-bucket ring buffers; prefetch workers must
+        # not interleave fills (device_put copies on every backend we run,
+        # so the staged block is detached before the lock releases)
+        self._stage_lock = threading.Lock()
+
+        def _step(params, opt_state, block):
+            # runs only while tracing: one increment per (bucket) compile
+            self.trace_counts["train_step"] += 1
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_block(model, p, block))(params)
+            new_params, new_state = opt.update(grads, opt_state, params)
+            return new_params, new_state, loss
+
+        # jit's signature cache keys on leaf shapes + the plan's static
+        # geometry — both pure functions of the bucket, so this single
+        # jitted callable holds exactly one executable per touched bucket
+        self._step = jax.jit(_step)
+        self._acc = jax.jit(
+            lambda params, block, mask: accuracy_block(model, params,
+                                                       block, mask))
+
+    def _prepare(self, view):
+        with self._stage_lock:
+            block = self.stager.stage(view)
+            self.buckets_touched.add((int(block.x.shape[0]),
+                                      int(block.src.shape[0])))
+            # the staged block aliases the builder's ring buffers (and a
+            # dense view's masks alias its ViewBuilder's ring). Handing
+            # those to jax directly is unsafe: the CPU backend ZERO-COPIES
+            # sufficiently aligned numpy arrays, and even an explicit
+            # jax-side copy materializes asynchronously — either way a
+            # later fill of the same ring slot races an in-flight step's
+            # input. A numpy copy is synchronous by construction, so the
+            # block is detached before the lock releases.
+            return jax.tree_util.tree_map(np.array, block)
+
+    # -- the training loop ----------------------------------------------------
+
+    def fit(self, views, steps: Optional[int] = None, prefetch: bool = True,
+            prefetch_workers: Optional[int] = None, eval_every: int = 0,
+            eval_view=None, eval_mask: Optional[np.ndarray] = None,
+            max_in_flight: int = 2, log_every: int = 0, log=print) -> dict:
+        """Run ``steps`` views through the bucketed step; same contract
+        and return shape as :meth:`Trainer.fit` (losses synced at the
+        end, ViewStreams get the deterministic multi-worker prefetch,
+        plain iterators the double-buffered pipeline)."""
+        stream = views if isinstance(views, ViewStream) else None
+        if stream is not None:
+            if prefetch:
+                if prefetch_workers is None:
+                    prefetch_workers = max(
+                        1, min(4, (os.cpu_count() or 2) - 1))
+                staged_iter = _MultiStreamPrefetcher(
+                    stream, self._prepare, steps, workers=prefetch_workers,
+                    depth=self.prefetch_depth)
+            else:
+                bounded = (itertools.islice(stream, steps)
+                           if steps is not None else stream)
+                staged_iter = (self._prepare(v) for v in bounded)
+        else:
+            if steps is not None:
+                views = itertools.islice(views, steps)
+            staged_iter = (_ViewPrefetcher(views, self._prepare,
+                                           self.prefetch_depth)
+                           if prefetch else
+                           (self._prepare(v) for v in views))
+
+        losses, pending, evals = [], [], []
+        try:
+            for staged in staged_iter:
+                if max_in_flight > 0 and len(pending) >= max_in_flight:
+                    losses.append(float(pending.pop(0)))
+                self.params, self.opt_state, loss = self._step(
+                    self.params, self.opt_state, staged)
+                self.step_num += 1
+                pending.append(loss)
+                if (eval_every and eval_view is not None
+                        and self.step_num % eval_every == 0):
+                    rec = {"step": self.step_num, "loss": float(loss),
+                           "eval_acc": self.evaluate(eval_view, eval_mask)}
+                    evals.append(rec)
+                    if log_every:
+                        log(f"step {rec['step']:5d}  "
+                            f"loss {rec['loss']:.4f}  "
+                            f"eval_acc {rec['eval_acc']:.4f}")
+        finally:
+            if isinstance(staged_iter,
+                          (_ViewPrefetcher, _MultiStreamPrefetcher)):
+                staged_iter.close()
+        losses.extend(float(l) for l in pending)
+        self.history.extend(evals)
+        return {"losses": losses, "evals": evals, "steps": self.step_num}
+
+    # -- eval -------------------------------------------------------------------
+
+    def evaluate(self, view, mask: Optional[np.ndarray] = None) -> float:
+        """Accuracy over ``view``'s block (a dense GraphView stages the
+        cached base block; a CompactView a tight-padded one-off)."""
+        block = view.as_block(gcn_norm=self.stager.gcn_norm,
+                              csc_plan=self.stager.csc_plan)
+        if mask is None:
+            g = view.graph
+            mask = (g.test_mask if g.test_mask is not None else None)
+        if mask is not None:
+            flat = np.asarray(mask).astype(np.float32)
+            if hasattr(view, "nodes"):   # CompactView: global -> local ids
+                flat = flat[view.nodes]
+            m = np.zeros(block.x.shape[0], np.float32)
+            m[:len(flat)] = flat
+        else:
+            m = block.loss_mask
+        return float(self._acc(self.params, block, m))
+
+    # -- contracts / lifecycle ---------------------------------------------------
+
+    def reset(self, params: Optional[Any] = None, seed: int = 0):
+        """Fresh params/opt state keeping the per-bucket compiled steps."""
+        if params is None:
+            params = self.model.init(jax.random.PRNGKey(seed),
+                                     self.g.node_features.shape[1])
+        self.params = params
+        self.opt_state = self.opt.init(params)
+        self.step_num = 0
+        self.history = []
+
+    def assert_compiled_per_bucket(self):
+        """The bucketed trace-count contract: the step must have been
+        traced exactly once per *touched* bucket shape — repeat epochs
+        over the same buckets add zero traces."""
+        n = self.trace_counts["train_step"]
+        touched = len(self.buckets_touched)
+        if touched == 0:
+            raise RetraceError(
+                "assert_compiled_per_bucket: the train step never ran — "
+                "call fit() before asserting the contract")
+        if n != touched:
+            raise RetraceError(
+                f"train step was traced {n} times over {touched} touched "
+                f"bucket shapes (expected exactly one trace per bucket): "
+                "a view was staged with a shape or plan geometry not "
+                "determined by its bucket")

@@ -34,6 +34,10 @@ class Graph:
     # cached CSCPlans for the blocked aggregation kernels, keyed by
     # (n_pad, e_pad, block_n, block_e) — built once, shared by every view
     _csc_plans: dict = field(default_factory=dict, repr=False)
+    # cached per-edge GCN norm + strategy-invariant base blocks (views
+    # stamp their masks onto a shallow copy — see base_block below)
+    _gcn_norm: Optional[np.ndarray] = field(default=None, repr=False)
+    _base_blocks: dict = field(default_factory=dict, repr=False)
 
     @property
     def num_edges(self) -> int:
@@ -73,10 +77,15 @@ class Graph:
 
     def gcn_norm(self) -> np.ndarray:
         """Per-edge symmetric GCN normalization 1/sqrt(d_i d_j) with
-        self-loop-augmented degrees (Kipf & Welling)."""
-        deg = self.in_degree().astype(np.float64) + 1.0
-        return (1.0 / np.sqrt(deg[self.src] * deg[self.dst])).astype(
-            np.float32)
+        self-loop-augmented degrees (Kipf & Welling). Cached — the edge
+        set never changes, so every view/block of this graph shares one
+        (M,) array (compact views gather slices of it per batch)."""
+        if self._gcn_norm is None:
+            deg = self.in_degree().astype(np.float64) + 1.0
+            self._gcn_norm = (
+                1.0 / np.sqrt(deg[self.src] * deg[self.dst])).astype(
+                np.float32)
+        return self._gcn_norm
 
     def csc_plan(self, pad_nodes: int = 0, pad_edges: int = 0,
                  block_n: int = 128, block_e: int = 256):
@@ -183,6 +192,21 @@ def build_block(g: Graph, pad_nodes: int = 0, pad_edges: int = 0,
     plan = g.csc_plan(n_pad, e_pad) if csc_plan else None
     return GraphBlock(src, dst, emask, nmask, x, y, lm, ew, ea,
                       csc_plan=plan)
+
+
+def base_block(g: Graph, gcn_norm: bool = True,
+               csc_plan: bool = False) -> GraphBlock:
+    """The strategy-invariant whole-graph block, cached per
+    ``(gcn_norm, csc_plan)``: edge layout, features, labels and edge
+    weights are identical across every view of one graph — only the loss
+    mask and activity masks differ, and :meth:`GraphView.as_block` stamps
+    those onto a shallow copy. Callers must treat the shared arrays as
+    read-only."""
+    key = (bool(gcn_norm), bool(csc_plan))
+    if key not in g._base_blocks:
+        g._base_blocks[key] = build_block(g, gcn_norm=gcn_norm,
+                                          csc_plan=csc_plan)
+    return g._base_blocks[key]
 
 
 # ---------------------------------------------------------------------------

@@ -85,8 +85,10 @@ def citation_graph(which: str = "cora", seed: int = 0) -> Graph:
         "pubmed": (2500, 3, 100, 0.004, 0.0004),
     }[which]
     n, c, f, p_in, p_out = spec
+    # NOT hash(which): str hashes are salted per process (PYTHONHASHSEED),
+    # which made "deterministic in seed" silently false across runs
     g = sbm_graph(n, c, f, p_in, p_out, feature_noise=1.5,
-                  seed=seed + hash(which) % 1000, name=which)
+                  seed=seed + sum(which.encode()) % 1000, name=which)
     # bag-of-words flavour: sparsify + binarize features
     rng = np.random.default_rng(seed + 7)
     keep = rng.random(g.node_features.shape) < 0.3

@@ -103,6 +103,30 @@ def build_csc_plan(segment_ids: np.ndarray, num_segments: int,
                    num_segments, E)
 
 
+def build_bucket_csc_plan(dst_local: np.ndarray, n_pad: int, e_pad: int,
+                          block_n: int = 128,
+                          block_e: int = 256) -> CSCPlan:
+    """Bucket-shape-stable plan over a compact view's local destination
+    ids: every plan built for one ``(n_pad, e_pad)`` bucket has identical
+    leaf shapes AND identical static geometry (``num_blocks``/``l_pad``/
+    ``num_edges`` derive from the bucket, not the view), so a jitted step
+    taking the plan as a pytree caches exactly one executable per bucket.
+
+    Pad lanes carry segment id ``n_pad`` — outside every block's range, so
+    pad edges join no gather block; their values are additionally nulled
+    by the block's ``edge_mask`` like any padded edge."""
+    e = len(dst_local)
+    assert e <= e_pad and (len(dst_local) == 0
+                           or int(dst_local.max()) < n_pad), \
+        (e, e_pad, n_pad)
+    ids = np.full(e_pad, n_pad, np.int32)
+    ids[:e] = dst_local
+    # worst case all e_pad edges land in one node block: forcing l_pad to
+    # that bound makes the lane-axis shape a pure function of the bucket
+    l_pad = max(block_e, ((e_pad + block_e - 1) // block_e) * block_e)
+    return build_csc_plan(ids, n_pad, block_n, block_e, l_pad=l_pad)
+
+
 def build_csc_plans_stacked(segment_ids_rows, num_segments: int,
                             block_n: int = 128, block_e: int = 256):
     """One plan per row of ``segment_ids_rows`` (P, E), all with identical

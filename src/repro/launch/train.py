@@ -37,7 +37,8 @@ def train_gnn(dataset: str, model_name: str, strategy: str, steps: int,
               num_layers: int = 2, eval_every: int = 20,
               use_engine: Optional[int] = None,
               partition_method: str = "1d_src",
-              prefetch_workers: Optional[int] = None) -> dict:
+              prefetch_workers: Optional[int] = None,
+              compact: bool = False) -> dict:
     from repro.graph import make_dataset
     from repro.models import make_gnn
     from repro.core.mpgnn import loss_block, accuracy_block
@@ -70,12 +71,15 @@ def train_gnn(dataset: str, model_name: str, strategy: str, steps: int,
     if strategy == "cluster":
         clusters = label_propagation_clusters(
             g, max_cluster_size=max(64, g.num_nodes // 50), seed=seed)
+    # compact sampled-subgraph views (local-id blocks + bucketed padding)
+    # apply to the sampling strategies; the global view IS the graph
+    compact = compact and strategy in ("mini", "cluster")
     views = strategy_views(
         g, strategy, cfg.num_layers, seed=seed,
         batch_nodes=max(32, labeled // 10), clusters=clusters,
         clusters_per_batch=max(1, (int(clusters.max()) + 1) // 20)
         if clusters is not None else 0,
-        halo_hops=0)
+        halo_hops=0, compact=compact)
 
     gcn_norm = model_name == "gcn"
     test_mask = (g.test_mask if g.test_mask is not None else g.train_mask)
@@ -104,6 +108,33 @@ def train_gnn(dataset: str, model_name: str, strategy: str, steps: int,
                     "test_acc": e["eval_acc"]} for e in out["evals"]]
         if history and history[-1]["step"] == steps:
             final_acc = history[-1]["test_acc"]   # fit already evaluated
+        else:
+            final_acc = trainer.evaluate(gbv, mask)
+            history.append({"step": steps, "loss": out["losses"][-1],
+                            "test_acc": final_acc})
+        return {"history": history, "wall_s": wall,
+                "params": trainer.params, "final_acc": final_acc,
+                "model": model, "graph": g}
+
+    if compact:
+        # bucketed compact path: CompactTrainer stages each view into a
+        # small fixed menu of padded shapes (compiled once per bucket)
+        from repro.core.trainer import CompactTrainer
+        trainer = CompactTrainer(model, g, opt, params=params,
+                                 gcn_norm=gcn_norm)
+        gbv = global_batch_view(g, cfg.num_layers)
+        mask = test_mask.astype(np.float32)
+        t0 = time.perf_counter()
+        out = trainer.fit(views, steps=steps, eval_every=eval_every,
+                          eval_view=gbv, eval_mask=mask,
+                          prefetch_workers=prefetch_workers,
+                          log_every=1, log=log.info)
+        wall = time.perf_counter() - t0
+        trainer.assert_compiled_per_bucket()
+        history = [{"step": e["step"], "loss": e["loss"],
+                    "test_acc": e["eval_acc"]} for e in out["evals"]]
+        if history and history[-1]["step"] == steps:
+            final_acc = history[-1]["test_acc"]
         else:
             final_acc = trainer.evaluate(gbv, mask)
             history.append({"step": steps, "loss": out["losses"][-1],
@@ -230,6 +261,10 @@ def main(argv=None):
                    help="view-builder threads for the engine path "
                         "(default: min(4, cores-1); deterministic for "
                         "any count)")
+    g.add_argument("--compact", action="store_true",
+                   help="compact sampled-subgraph views (relabeled "
+                        "local-id blocks, size-bucketed padding) for "
+                        "mini/cluster; dense masks stay the parity oracle")
     lm = sub.add_parser("lm")
     lm.add_argument("--arch", required=True)
     lm.add_argument("--steps", type=int, default=50)
@@ -244,7 +279,8 @@ def main(argv=None):
                         hidden=args.hidden, num_layers=args.layers,
                         use_engine=args.engine_partitions or None,
                         partition_method=args.partition_method,
-                        prefetch_workers=args.prefetch_workers)
+                        prefetch_workers=args.prefetch_workers,
+                        compact=args.compact)
         print(f"final test acc: {out['final_acc']:.4f} "
               f"({out['wall_s']:.1f}s)")
     else:

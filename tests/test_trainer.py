@@ -307,6 +307,103 @@ def test_checkpoint_latest_roundtrip(setup, tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# compact bucketed trainer: once-per-bucket trace contract (PR 6)
+# ---------------------------------------------------------------------------
+
+
+def test_compact_trainer_bucket_retrace_contract():
+    """The bucketed analog of compiled-once: exactly one trace per
+    *touched* (n_pad, e_pad) shape, and repeat epochs over the same
+    buckets add zero traces."""
+    from repro.core.trainer import CompactTrainer
+    from repro.models import make_gnn
+    g = _graph(seed=6)
+    cfg = GNNConfig(model="gcn", num_layers=2, hidden_dim=16,
+                    num_classes=4, feature_dim=8)
+    trainer = CompactTrainer(make_gnn(cfg), g, adam(1e-2), seed=0)
+    with pytest.raises(RetraceError, match="never ran"):
+        trainer.assert_compiled_per_bucket()    # no step yet
+
+    # tiny capped mini views land in the smallest bucket; the dense
+    # global stream passes through at the full-graph shape — two
+    # guaranteed-distinct staged shapes
+    mini = strategy_views(g, "mini", 2, seed=0, steps=3, batch_nodes=4,
+                          neighbor_cap=2, compact=True)
+    trainer.fit(mini, prefetch=False)
+    trainer.fit(strategy_views(g, "global", 2, steps=2), prefetch=False)
+    assert (g.num_nodes, g.num_edges) in trainer.buckets_touched
+    assert len(trainer.buckets_touched) == 2
+    assert trainer.trace_counts["train_step"] == 2
+    trainer.assert_compiled_per_bucket()
+
+    # repeat epochs: same buckets, ZERO new traces
+    trainer.fit(strategy_views(g, "mini", 2, seed=1, steps=3,
+                               batch_nodes=4, neighbor_cap=2,
+                               compact=True), prefetch=False)
+    trainer.fit(strategy_views(g, "global", 2, steps=1), prefetch=False)
+    assert trainer.trace_counts["train_step"] == 2
+    assert trainer.step_num == 9
+    trainer.assert_compiled_per_bucket()
+    # reset keeps the compiled steps
+    trainer.reset(seed=1)
+    trainer.fit(strategy_views(g, "mini", 2, seed=2, steps=2,
+                               batch_nodes=4, neighbor_cap=2,
+                               compact=True), prefetch=False)
+    assert trainer.trace_counts["train_step"] == 2
+
+    trainer.trace_counts["train_step"] = 5      # simulate a retrace
+    with pytest.raises(RetraceError, match="traced 5 times"):
+        trainer.assert_compiled_per_bucket()
+
+
+def test_compact_trainer_prefetch_deterministic():
+    """Compact staging under the worker pool: identical trajectories for
+    no-prefetch / 1 worker / 4 workers (the staged block is detached from
+    the per-bucket ring before the stage lock releases)."""
+    from repro.core.trainer import CompactTrainer
+    from repro.models import make_gnn
+    g = _graph(seed=7)
+    cfg = GNNConfig(model="gcn", num_layers=2, hidden_dim=16,
+                    num_classes=4, feature_dim=8)
+    model = make_gnn(cfg)
+    import jax
+    params = model.init(jax.random.PRNGKey(0), 8)
+    ref = None
+    for kwargs in ({"prefetch": False},
+                   {"prefetch": True, "prefetch_workers": 1},
+                   {"prefetch": True, "prefetch_workers": 4}):
+        trainer = CompactTrainer(model, g, adam(1e-2), params=params)
+        out = trainer.fit(strategy_views(g, "mini", 2, seed=13, steps=6,
+                                         batch_nodes=16, compact=True),
+                          **kwargs)
+        if ref is None:
+            ref = out["losses"]
+        else:
+            assert out["losses"] == ref, kwargs
+
+
+def test_engine_trainer_compact_stream_parity(setup):
+    """The distributed engine consumes compact streams through
+    _shard_compact bit-exactly: same losses as the dense stream, and the
+    engine's compiled-once contract holds (sharded shapes come from the
+    PartitionPlan, not the view)."""
+    g, engine, clusters = setup
+    losses = {}
+    for compact in (False, True):
+        trainer = Trainer(engine, adam(1e-2), seed=0)
+        out = trainer.fit(
+            strategy_views(g, "mini", 2, seed=17, batch_nodes=24,
+                           compact=compact), steps=4)
+        out2 = trainer.fit(
+            strategy_views(g, "cluster", 2, seed=17, clusters=clusters,
+                           clusters_per_batch=2, halo_hops=1,
+                           compact=compact), steps=3)
+        trainer.assert_compiled_once()
+        losses[compact] = out["losses"] + out2["losses"]
+    assert losses[False] == losses[True]
+
+
+# ---------------------------------------------------------------------------
 # distributed (P=4) sweep — subprocess with fake devices, slow lane
 # ---------------------------------------------------------------------------
 

@@ -2,6 +2,11 @@
 ``bfs_layers``): parity against the loop/recompute oracles, buffer-ring
 reuse, neighbor-cap sampling semantics, and ViewStream index stability.
 
+PR 6 adds the compact sampled-subgraph path: CompactView-vs-dense parity
+(bit-exact node/edge sets from the same stream index), size-bucketed
+padding (BucketSpec / CompactBlockBuilder), sharding parity, and loss
+parity through both aggregate backends.
+
 The hypothesis sweep lives in test_strategies_properties.py (dev extra).
 """
 import numpy as np
@@ -10,12 +15,14 @@ import pytest
 from repro.core.clustering import (cluster_members, hash_clusters,
                                    label_propagation_clusters)
 from repro.core.strategies import (cluster_batch_views, mini_batch_views,
-                                   strategy_views)
+                                   shard_view, strategy_views)
 from repro.core.subgraph import (bfs_layers, bfs_layers_loop,
                                  khop_subgraph_view)
-from repro.core.views import (ClusterViewCache, ClusterViewStream,
-                              GlobalViewStream, MiniBatchViewStream,
-                              ViewBuilder, cluster_view_recompute)
+from repro.core.views import (BucketSpec, ClusterViewCache,
+                              ClusterViewStream, CompactBlockBuilder,
+                              CompactView, GlobalViewStream, GraphView,
+                              MiniBatchViewStream, ViewBuilder,
+                              cluster_view_recompute)
 from repro.graph import sbm_graph
 
 
@@ -283,3 +290,274 @@ def test_generators_yield_detached_views():
     cvs = list(cluster_batch_views(g, 2, clusters, clusters_per_batch=2,
                                    halo_hops=1, seed=0, steps=3))
     assert len({id(v.edge_active) for v in cvs}) == 3
+
+
+# ---------------------------------------------------------------------------
+# compact sampled-subgraph views: bit-exact parity with the dense oracle
+# ---------------------------------------------------------------------------
+
+
+def _assert_compact_matches_dense(cv, dv):
+    """to_dense() is the bit-parity bridge: identical node/edge/loss masks
+    from the same stream index, plus the compact structural invariants."""
+    assert isinstance(cv, CompactView)
+    cd = cv.to_dense()
+    assert np.array_equal(cd.node_active, dv.node_active)
+    assert np.array_equal(cd.edge_active, dv.edge_active)
+    assert np.array_equal(cd.loss_mask, dv.loss_mask)
+    assert cv.active_counts() == dv.active_counts()
+    # structural invariants the bucketed block fill relies on
+    assert int(cv.hop_offsets[-1]) == cv.num_nodes
+    assert np.all(np.diff(cv.hop_offsets) >= 0)
+    assert np.all(np.diff(cv.dst_local) >= 0)          # CSC-sorted
+    assert len(np.unique(cv.nodes)) == cv.num_nodes    # relabeling is 1:1
+    g = cv.graph
+    assert np.array_equal(cv.nodes[cv.src_local], g.src[cv.edge_ids])
+    assert np.array_equal(cv.nodes[cv.dst_local], g.dst[cv.edge_ids])
+
+
+@pytest.mark.parametrize("neighbor_cap", [0, 5])
+def test_compact_mini_parity_bit_exact(neighbor_cap):
+    g = _g(30)
+    kw = dict(batch_nodes=16, neighbor_cap=neighbor_cap, seed=3)
+    dense = strategy_views(g, "mini", 2, **kw)
+    comp = strategy_views(g, "mini", 2, compact=True, **kw)
+    for i in (0, 1, 4):
+        _assert_compact_matches_dense(comp.build(i),
+                                      dense.build(i).copy_masks())
+
+
+@pytest.mark.parametrize("halo", [0, 1])
+def test_compact_cluster_parity_bit_exact(halo):
+    g = _g(31)
+    clusters = label_propagation_clusters(g, max_cluster_size=60, seed=0)
+    kw = dict(clusters=clusters, clusters_per_batch=2, halo_hops=halo,
+              seed=halo)
+    dense = strategy_views(g, "cluster", 2, **kw)
+    comp = strategy_views(g, "cluster", 2, compact=True, **kw)
+    for i in (0, 2):
+        cv = comp.build(i)
+        _assert_compact_matches_dense(cv, dense.build(i).copy_masks())
+        # cluster ordering is flat: every node active in every layer
+        assert np.all(cv.hop_offsets == cv.num_nodes)
+
+
+def test_compact_stream_iterator_detaches():
+    """next() on a compact stream honors the detached-view contract."""
+    g = _g(40)
+    s = strategy_views(g, "mini", 2, seed=0, batch_nodes=8, compact=True)
+    buffered = [next(s) for _ in range(3)]
+    replay = [s.build(i) for i in range(3)]
+    for v, r in zip(buffered, replay):
+        assert isinstance(v, CompactView)
+        assert np.array_equal(v.nodes, r.nodes)
+        assert np.array_equal(v.edge_ids, r.edge_ids)
+
+
+def test_compact_shard_parity():
+    """_shard_compact's O(view) scatter == dense shard of to_dense()."""
+    from repro.core.partition import build_partitions
+    g = _g(32)
+    plan = build_partitions(g, 3).plan
+    clusters = label_propagation_clusters(g, max_cluster_size=60, seed=0)
+    for strategy in ("mini", "cluster"):
+        comp = strategy_views(g, strategy, 2, seed=9, batch_nodes=20,
+                              clusters=clusters, clusters_per_batch=2,
+                              halo_hops=1, compact=True)
+        for i in range(3):
+            cv = comp.build(i)
+            a = shard_view(plan, cv)
+            b = shard_view(plan, cv.to_dense())
+            assert set(a) == set(b)
+            for k in a:
+                assert a[k].shape == b[k].shape
+                assert np.array_equal(a[k], b[k]), (strategy, k)
+
+
+def test_compact_view_nbytes_scales_with_view():
+    """The memory model the tentpole claims: compact host bytes are
+    O(view), so a small mini view is far below the dense (K,N)+(K,E)
+    footprint on the same graph."""
+    g = _g(41)
+    s = strategy_views(g, "mini", 2, seed=0, batch_nodes=4,
+                       neighbor_cap=3, compact=True)
+    cv = s.build(0)
+    dense_bytes = 4 * (2 * g.num_nodes + 2 * g.num_edges + g.num_nodes)
+    assert cv.nbytes() < dense_bytes / 4
+
+
+# ---------------------------------------------------------------------------
+# size-bucketed padding: BucketSpec + CompactBlockBuilder
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_spec_pick_and_overflow():
+    spec = BucketSpec(((64, 256), (128, 1024), (32, 128)))
+    assert spec.shapes == ((32, 128), (64, 256), (128, 1024))
+    assert len(spec) == 3
+    assert spec.pick(10, 100) == (32, 128)    # smallest fit
+    assert spec.pick(33, 100) == (64, 256)    # node side promotes
+    assert spec.pick(10, 300) == (128, 1024)  # edge side promotes too
+    with pytest.raises(ValueError, match="overflows every bucket"):
+        spec.pick(200, 10)
+    with pytest.raises(ValueError):
+        BucketSpec(())
+
+
+def test_bucket_spec_for_graph_fits_worst_case():
+    g = _g(42)
+    spec = BucketSpec.for_graph(g)
+    # the largest bucket always fits the whole graph (no overflow possible
+    # for any view) and the ladder is strictly sorted
+    n_top, e_top = spec.shapes[-1]
+    assert n_top >= g.num_nodes and e_top >= g.num_edges
+    assert spec.pick(g.num_nodes, g.num_edges) == (n_top, e_top)
+
+
+def test_compact_block_builder_ring_reuse_and_overflow():
+    g = _g(33)
+    comp = strategy_views(g, "mini", 2, seed=1, batch_nodes=12,
+                          compact=True)
+    bb = CompactBlockBuilder(g, 2, slots=2)
+    ids, shapes = set(), set()
+    for i in range(6):
+        cv = comp.build(i)
+        assert bb.bucket_for(cv) in bb.buckets.shapes
+        blk = bb.stage(cv)
+        shapes.add((blk.x.shape[0], blk.src.shape[0]))
+        ids.add(id(blk.x))
+    assert shapes <= set(bb.buckets.shapes)
+    # per-bucket rings: at most ``slots`` buffer sets per touched bucket,
+    # and untouched buckets allocate nothing (the empty-bucket case)
+    assert len(ids) <= 2 * len(shapes)
+    assert set(bb._rings) == shapes
+    assert bb.stages == 6
+    # a spec too small for the view fails loudly at stage time
+    tiny = CompactBlockBuilder(g, 2, buckets=BucketSpec(((2, 2),)))
+    with pytest.raises(ValueError, match="overflows"):
+        tiny.stage(comp.build(0))
+
+
+def test_compact_block_fill_matches_to_dense_block():
+    """The bucket-padded block carries exactly the view's data: pad lanes
+    inert (mask 0, src=dst=0), prefix lanes equal to the gathered graph
+    data, per-layer actives equal to the dense masks in local order."""
+    g = _g(43)
+    comp = strategy_views(g, "mini", 2, seed=2, batch_nodes=10,
+                          compact=True)
+    cv = comp.build(0)
+    n, e = cv.num_nodes, cv.num_edges
+    blk = cv.as_block(bucket=BucketSpec.for_graph(g).pick(n, e))
+    assert blk.node_mask[:n].all() and not blk.node_mask[n:].any()
+    assert blk.edge_mask[:e].all() and not blk.edge_mask[e:].any()
+    assert np.array_equal(blk.x[:n], g.node_features[cv.nodes])
+    assert np.array_equal(blk.y[:n], g.labels[cv.nodes])
+    assert np.array_equal(blk.edge_weight[:e], g.gcn_norm()[cv.edge_ids])
+    assert not blk.edge_weight[e:].any()
+    dv = cv.to_dense()
+    for k in range(2):
+        assert np.array_equal(blk.node_active[k, :n],
+                              dv.node_active[k, cv.nodes])
+        assert np.array_equal(blk.edge_active[k, :e],
+                              dv.edge_active[k, cv.edge_ids])
+        assert not blk.node_active[k, n:].any()
+        assert not blk.edge_active[k, e:].any()
+
+
+@pytest.mark.parametrize("backend", ["reference", "csc"])
+def test_compact_block_loss_parity_both_backends(backend):
+    """Same loss from the compact bucketed block and the dense full-graph
+    block, through both aggregate backends (the CSC path exercises the
+    per-bucket CSCPlan geometry)."""
+    import jax
+    from repro.config import GNNConfig
+    from repro.core.mpgnn import loss_block
+    from repro.models import make_gnn
+    g = _g(34)
+    cfg = GNNConfig(model="gcn", num_layers=2, hidden_dim=8, num_classes=4,
+                    feature_dim=8, aggregate_backend=backend)
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(0), 8)
+    use_csc = backend == "csc"
+    kw = dict(batch_nodes=16, seed=6)
+    dense = strategy_views(g, "mini", 2, **kw)
+    comp = strategy_views(g, "mini", 2, compact=True, **kw)
+    spec = BucketSpec.for_graph(g)
+    for i in range(2):
+        dv = dense.build(i).copy_masks()
+        cv = comp.build(i)
+        ld = float(loss_block(model, params,
+                              dv.as_block(csc_plan=use_csc)))
+        bucket = spec.pick(cv.num_nodes, cv.num_edges)
+        lc = float(loss_block(model, params,
+                              cv.as_block(csc_plan=use_csc, bucket=bucket)))
+        assert np.isclose(ld, lc, atol=1e-5), (backend, i, ld, lc)
+
+
+@pytest.mark.parametrize("strategy", ["mini", "cluster"])
+def test_compact_trainer_loss_trajectory_matches_dense(strategy):
+    """End-to-end fp parity: the bucketed CompactTrainer over a compact
+    stream tracks the same trainer over the dense stream step for step."""
+    import jax
+    from repro.config import GNNConfig
+    from repro.core.trainer import CompactTrainer
+    from repro.models import make_gnn
+    from repro.optim import adam
+    g = _g(37)
+    clusters = label_propagation_clusters(g, max_cluster_size=60, seed=0)
+    cfg = GNNConfig(model="gcn", num_layers=2, hidden_dim=8, num_classes=4,
+                    feature_dim=8)
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(0), 8)
+    losses = {}
+    for compact in (False, True):
+        trainer = CompactTrainer(model, g, adam(1e-2), params=params)
+        views = strategy_views(g, strategy, 2, seed=5, steps=4,
+                               batch_nodes=16, clusters=clusters,
+                               clusters_per_batch=2, halo_hops=1,
+                               compact=compact)
+        losses[compact] = trainer.fit(views, prefetch=False)["losses"]
+    assert len(losses[True]) == 4
+    assert np.allclose(losses[False], losses[True], atol=2e-4), losses
+
+
+# ---------------------------------------------------------------------------
+# active_counts + base-block cache (PR 6 satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_active_counts_meta_fast_path_matches_scan():
+    g = _g(35)
+    clusters = label_propagation_clusters(g, max_cluster_size=60, seed=0)
+    for strategy in ("mini", "cluster"):
+        v = strategy_views(g, strategy, 2, seed=0, batch_nodes=16,
+                           clusters=clusters,
+                           clusters_per_batch=2).build(0).copy_masks()
+        fast = v.active_counts()
+        # hand-built view without the recorded meta keys -> mask scan
+        stripped = GraphView(v.graph, v.K, v.strategy, v.node_active,
+                             v.edge_active, v.loss_mask, {})
+        assert stripped.active_counts() == fast
+    # None masks (the global view) fall back to graph totals
+    gv = GraphView(g, 2, "global", None, None,
+                   np.ones(g.num_nodes, np.float32), {})
+    c = gv.active_counts()
+    assert c["active_nodes"] == g.num_nodes
+    assert c["active_edges"] == g.num_edges
+
+
+def test_base_block_cached_and_masks_stamped():
+    from repro.graph.csr import base_block
+    g = _g(36)
+    b1 = base_block(g, gcn_norm=True)
+    assert base_block(g, gcn_norm=True) is b1        # cached per graph
+    assert base_block(g, gcn_norm=False) is not b1   # keyed on flags
+    v = strategy_views(g, "mini", 2, seed=0, batch_nodes=8).build(0)
+    blk = v.as_block()
+    # strategy-invariant arrays are shared, not rebuilt per view
+    assert blk.x is b1.x and blk.src is b1.src
+    assert blk.edge_weight is b1.edge_weight
+    # per-view masks are stamped onto the shallow copy
+    assert blk.node_active is v.node_active
+    assert blk.loss_mask is not b1.loss_mask
+    assert np.array_equal(blk.loss_mask, (v.loss_mask > 0))
