@@ -8,7 +8,6 @@ factor that explains DistDGL's non-scaling (Fig. 9 / §5.3.2).
 """
 from __future__ import annotations
 
-import time
 
 import jax
 import numpy as np
@@ -18,7 +17,7 @@ from repro.core.clustering import label_propagation_clusters
 from repro.core.partition import build_partitions, partition_stats
 from repro.core.strategies import (cluster_batch_views, global_batch_view,
                                    mini_batch_views, shard_view)
-from repro.core.subgraph import bfs_layers, khop_subgraph_view
+from repro.core.subgraph import khop_subgraph_view
 from repro.graph import make_dataset, powerlaw_graph
 
 

@@ -1,0 +1,34 @@
+"""Static analysis over traced jaxprs, Pallas launch geometry, and source.
+
+Three analyzers share one :class:`Rule` registry and :class:`Finding`
+vocabulary:
+
+- :mod:`repro.analysis.jaxpr` — contract rules over traced jaxprs
+  (pre-gather / segment-scatter / backward-gather on the csc path,
+  O(view) compact steps, f64 drift, host transfers, buffer donation);
+- :mod:`repro.analysis.vmem` — per-launch VMEM residency reconstructed
+  from every ``pallas_call``'s grid/BlockSpecs against a budget;
+- :mod:`repro.analysis.srclint` — AST lint (bare asserts, per-step
+  O(N) work in the hot view path).
+
+``python -m repro.analysis --strict`` traces the model zoo across
+strategies and backends, runs everything, and exits nonzero on any
+finding — the CI gate.
+"""
+from repro.analysis.jaxpr import (ContractError, Finding, JaxprContext,
+                                  Rule, RULES, check_or_raise,
+                                  count_segment_scatters, jaxpr_avals,
+                                  jaxpr_eqns, register, rule, run_rules)
+from repro.analysis.srclint import lint_file, lint_source, lint_tree
+from repro.analysis.vmem import (DEFAULT_VMEM_BUDGET, KernelStats,
+                                 analyze_pallas_eqn, check_vmem,
+                                 iter_kernel_stats)
+
+__all__ = [
+    "ContractError", "Finding", "JaxprContext", "Rule", "RULES",
+    "check_or_raise", "count_segment_scatters", "jaxpr_avals",
+    "jaxpr_eqns", "register", "rule", "run_rules",
+    "lint_file", "lint_source", "lint_tree",
+    "DEFAULT_VMEM_BUDGET", "KernelStats", "analyze_pallas_eqn",
+    "check_vmem", "iter_kernel_stats",
+]

@@ -1,0 +1,297 @@
+"""``python -m repro.analysis`` — the static-analysis gate.
+
+Traces the model zoo across aggregation backends and trainers, runs
+every applicable registry rule over the jaxprs, reconstructs VMEM
+residency for every Pallas launch, lints the source tree, and emits a
+text (and optionally JSON) report. ``--strict`` exits nonzero on any
+error finding — the CI contract.
+
+The smoke matrix (default, fast-lane friendly):
+
+- combine-level value_and_grad jaxprs for all four combine modes on the
+  csc backend — the exact Sum-stage contract (pregather +
+  segment-scatter + backward-gather);
+- one engine train-step + infer trace per zoo model x backend
+  (reference, csc) via :meth:`Trainer.traced_step_jaxpr` — f64 drift,
+  host transfers, donation accounting, VMEM, and (csc) pre-gather;
+- CompactTrainer bucketed steps over compact mini + cluster views — the
+  O(view) full-graph-aval contract per touched bucket;
+- srclint over the installed ``repro`` package.
+
+``--full`` widens the trainer sweep to every strategy's staged view and
+adds the sequence kernels (flash attention, wkv6) to the VMEM walk —
+the nightly lane.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+import numpy as np
+
+from repro.analysis.jaxpr import Finding, JaxprContext, run_rules
+from repro.analysis.srclint import lint_tree
+from repro.analysis.vmem import DEFAULT_VMEM_BUDGET, iter_kernel_stats
+
+MODELS = ("gcn", "sage", "sage_max", "gat")
+BACKENDS = ("reference", "csc")
+COMBINE_MODES = ("sum", "mean", "max", "softmax")
+
+# rule subsets per context kind. Combine-level losses are the exact
+# Sum-stage contract; model-level train steps legitimately gather and
+# scatter the edge axis in NN-Gather, so there the scatter/gather rules
+# stay off and pregather (which stays exact) + the step-hygiene rules
+# run. Compact steps add the O(view) aval contract.
+COMBINE_RULES = ("jaxpr.pregather", "jaxpr.segment-scatter",
+                 "jaxpr.backward-gather", "jaxpr.f64-promotion",
+                 "vmem.budget")
+TRAIN_RULES = ("jaxpr.pregather", "jaxpr.f64-promotion",
+               "jaxpr.host-transfer", "jaxpr.donation", "vmem.budget")
+INFER_RULES = ("jaxpr.f64-promotion", "jaxpr.host-transfer",
+               "vmem.budget")
+COMPACT_RULES = ("jaxpr.full-graph-aval", "jaxpr.f64-promotion",
+                 "jaxpr.host-transfer", "vmem.budget")
+
+
+def _graph(n=220, seed=0):
+    from repro.graph import sbm_graph
+    return sbm_graph(num_nodes=n, num_classes=4, feature_dim=8,
+                     p_in=0.05, p_out=0.005, seed=seed).add_self_loops()
+
+
+class Report:
+    def __init__(self, budget: int):
+        self.budget = budget
+        self.findings: List[Finding] = []
+        self.contexts = 0
+        self.kernels: List[dict] = []
+        self.lint_files = 0
+
+    def run(self, ctx: JaxprContext, ids) -> None:
+        self.contexts += 1
+        self.findings.extend(run_rules(ctx, ids=ids))
+        for stats in iter_kernel_stats(ctx.closed_jaxpr):
+            self.kernels.append(dict(stats.to_json(), label=ctx.label))
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == "error"]
+
+    def to_json(self) -> dict:
+        return {
+            "budget_bytes": self.budget,
+            "contexts_traced": self.contexts,
+            "lint_files": self.lint_files,
+            "findings": [f.to_json() for f in self.findings],
+            "kernels": self.kernels,
+        }
+
+
+def check_combine_modes(report: Report, interpret: bool = True) -> None:
+    """value_and_grad jaxprs of combine-level losses on the csc backend:
+    the exact Sum-stage contract, all four combine modes."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.aggregate import combine
+    from repro.kernels.ops import build_csc_plan
+
+    rng = np.random.default_rng(7)
+    E, N, H, D = 400, 90, 2, 8
+    ids = rng.integers(0, N // 2, E).astype(np.int32)
+    value = jnp.asarray(rng.normal(size=(E, H, D)), jnp.float32)
+    logit = jnp.asarray(rng.normal(size=(E, H)), jnp.float32)
+    mask = jnp.asarray(rng.random(E) > 0.3, jnp.float32)
+    dst = jnp.asarray(ids)
+    plan = build_csc_plan(ids, N, block_n=32, block_e=64)
+
+    for mode in COMBINE_MODES:
+        def loss(value, logit, _mode=mode):
+            out = combine(_mode, {"value": value, "logit": logit}, dst,
+                          N, mask, backend="csc", plan=plan)
+            return jnp.sum(jnp.sin(out) * out)
+
+        jx = jax.make_jaxpr(jax.value_and_grad(loss, argnums=(0, 1)))(
+            value, logit)
+        report.run(JaxprContext(jx, label=f"combine:{mode}", plan=plan,
+                                vmem_budget=report.budget),
+                   ids=COMBINE_RULES)
+
+
+def check_trainers(report: Report, full: bool = False) -> None:
+    """One Trainer per zoo model x backend: train-step + infer jaxprs."""
+    from repro.config import GNNConfig
+    from repro.core.clustering import label_propagation_clusters
+    from repro.core.engine import HybridParallelEngine
+    from repro.core.partition import build_partitions
+    from repro.core.strategies import strategy_views
+    from repro.core.trainer import Trainer
+    from repro.models import make_gnn
+    from repro.optim import adam
+
+    g = _graph()
+    clusters = label_propagation_clusters(g, max_cluster_size=60, seed=0)
+    strategies = ("global", "mini", "cluster") if full else ("global",)
+    for model_name in MODELS:
+        for backend in BACKENDS:
+            cfg = GNNConfig(model=model_name, num_layers=2, hidden_dim=16,
+                            num_classes=4, feature_dim=8,
+                            aggregate_backend=backend)
+            engine = HybridParallelEngine(make_gnn(cfg),
+                                          build_partitions(g, 1))
+            trainer = Trainer(engine, adam(1e-2), seed=0)
+            plan = engine._csc_meta if backend == "csc" else None
+            for strategy in strategies:
+                view = next(iter(strategy_views(
+                    g, strategy, K=2, seed=0, steps=1, batch_nodes=24,
+                    clusters=clusters, clusters_per_batch=2)))
+                label = f"train:{model_name}/{backend}/{strategy}"
+                jx = trainer.traced_step_jaxpr(view)
+                report.run(JaxprContext(
+                    jx, label=label, plan=plan,
+                    expect_donated=trainer.expected_donated,
+                    vmem_budget=report.budget), ids=TRAIN_RULES)
+            view = next(iter(strategy_views(g, "global", K=2, steps=1)))
+            jx = trainer.traced_infer_jaxpr(view)
+            report.run(JaxprContext(
+                jx, label=f"infer:{model_name}/{backend}",
+                vmem_budget=report.budget), ids=INFER_RULES)
+
+
+def check_compact_buckets(report: Report, full: bool = False) -> None:
+    """CompactTrainer bucketed steps: the O(view) aval contract per
+    touched bucket, for both backends."""
+    from repro.config import GNNConfig
+    from repro.core.clustering import label_propagation_clusters
+    from repro.core.strategies import strategy_views
+    from repro.core.trainer import CompactTrainer
+    from repro.models import make_gnn
+    from repro.optim import adam
+
+    g = _graph()
+    N, E = g.num_nodes, g.num_edges
+    clusters = label_propagation_clusters(g, max_cluster_size=60, seed=0)
+    backends = BACKENDS if full else ("csc",)
+    for backend in backends:
+        cfg = GNNConfig(model="gcn", num_layers=2, hidden_dim=16,
+                        num_classes=4, feature_dim=8,
+                        aggregate_backend=backend)
+        trainer = CompactTrainer(make_gnn(cfg), g, adam(1e-2), seed=0)
+        view_sets = [
+            ("mini", strategy_views(g, "mini", K=2, seed=0, steps=2,
+                                    batch_nodes=24, neighbor_cap=4,
+                                    compact=True)),
+            ("cluster", strategy_views(g, "cluster", K=2, seed=0, steps=2,
+                                       clusters=clusters,
+                                       clusters_per_batch=2,
+                                       compact=True)),
+        ]
+        for strategy, views in view_sets:
+            for i, view in enumerate(views):
+                jx = trainer.traced_step_jaxpr(view)
+                # a bucket pad that happens to equal the full graph's N
+                # or E is not a full-graph tensor — exempt the collision
+                # (and surface it in the label so reports show it)
+                staged = trainer.stager.stage(view)
+                pads = (int(staged.x.shape[0]), int(staged.src.shape[0]))
+                exempt = tuple(d for d in pads if d in (N, E))
+                report.run(JaxprContext(
+                    jx, label=f"compact:{backend}/{strategy}[{i}]",
+                    graph_shape=(N, E), exempt_dims=exempt,
+                    vmem_budget=report.budget), ids=COMPACT_RULES)
+
+
+def check_sequence_kernels(report: Report) -> None:
+    """--full only: the sequence kernels' launch geometry (flash
+    attention, wkv6) against the VMEM budget."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.ops import flash_attention_op, wkv6_op
+
+    B, T, H, D = 1, 256, 4, 64
+    rng = np.random.default_rng(3)
+    mk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+    q, k, v = mk(B, T, H, D), mk(B, T, H, D), mk(B, T, H, D)
+    jx = jax.make_jaxpr(
+        lambda q, k, v: flash_attention_op(q, k, v, causal=True))(q, k, v)
+    report.run(JaxprContext(jx, label="kernel:flash_attention",
+                            vmem_budget=report.budget),
+               ids=("jaxpr.f64-promotion", "vmem.budget"))
+    w, u = mk(B, T, H, D) * 0.1 + 0.9, mk(H, D)
+    jx = jax.make_jaxpr(
+        lambda r, k, v, w, u: wkv6_op(r, k, v, w, u))(q, k, v, w, u)
+    report.run(JaxprContext(jx, label="kernel:wkv6",
+                            vmem_budget=report.budget),
+               ids=("jaxpr.f64-promotion", "vmem.budget"))
+
+
+def check_srclint(report: Report, root: Optional[str] = None) -> None:
+    if root is None:
+        import repro
+        # namespace-package safe: __path__ always holds the package dir
+        root = next(iter(repro.__path__))
+    root = Path(root)
+    report.lint_files = len(list(root.rglob("*.py")))
+    report.findings.extend(lint_tree(root))
+
+
+def run_analysis(strict: bool = False, full: bool = False,
+                 budget: int = DEFAULT_VMEM_BUDGET,
+                 json_path: Optional[str] = None,
+                 lint_root: Optional[str] = None,
+                 out=print) -> int:
+    report = Report(budget)
+    out(f"repro.analysis: budget {budget / 2**20:.1f} MiB, "
+        f"{'full' if full else 'smoke'} matrix")
+    check_combine_modes(report)
+    out(f"  combine contracts: {len(COMBINE_MODES)} modes traced")
+    check_trainers(report, full=full)
+    check_compact_buckets(report, full=full)
+    out(f"  trainer/compact traces: {report.contexts} jaxpr contexts")
+    if full:
+        check_sequence_kernels(report)
+    check_srclint(report, root=lint_root)
+    out(f"  srclint: {report.lint_files} files")
+    out(f"  pallas launches analyzed: {len(report.kernels)}")
+
+    if json_path:
+        Path(json_path).write_text(json.dumps(report.to_json(), indent=2))
+        out(f"  json report -> {json_path}")
+
+    errors = report.errors
+    if not report.findings:
+        out(f"OK: 0 findings over {report.contexts} traced contexts")
+    else:
+        for f in report.findings:
+            out(f.render())
+        out(f"{len(report.findings)} findings "
+            f"({len(errors)} errors) over {report.contexts} contexts")
+    return 1 if (strict and errors) else 0
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static analysis over traced jaxprs, Pallas launch "
+                    "geometry, and the repro source tree")
+    p.add_argument("--strict", action="store_true",
+                   help="exit nonzero on any error finding (the CI gate)")
+    p.add_argument("--full", action="store_true",
+                   help="widen to every strategy and the sequence kernels")
+    p.add_argument("--json", metavar="PATH", default=None,
+                   help="write the JSON report here")
+    p.add_argument("--budget-mib", type=float,
+                   default=DEFAULT_VMEM_BUDGET / 2**20,
+                   help="per-launch VMEM budget in MiB (default 16)")
+    p.add_argument("--lint-root", default=None,
+                   help="package dir to lint (default: installed repro)")
+    args = p.parse_args(argv)
+    return run_analysis(strict=args.strict, full=args.full,
+                        budget=int(args.budget_mib * 2**20),
+                        json_path=args.json, lint_root=args.lint_root)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,7 +8,7 @@ static config; caches are explicit pytrees.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

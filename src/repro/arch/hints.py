@@ -43,7 +43,9 @@ def shard_hint(x, *logical):
     """Constrain x's sharding; logical names resolve through active rules."""
     if _RULES is None or _MESH is None:
         return x
-    assert len(logical) == x.ndim, (logical, x.shape)
+    if len(logical) != x.ndim:
+        raise ValueError(f"logical axes {logical} do not match array "
+                         f"rank {x.ndim} (shape {x.shape})")
     spec = []
     for dim, name in zip(x.shape, logical):
         axis = _RULES.get(name) if name is not None else None

@@ -149,7 +149,9 @@ def mamba_apply(p, x, mc, cache=None):
 
     if cache is None or T > 1:
         chunk = min(mc.chunk, T)
-        assert T % chunk == 0
+        if T % chunk != 0:
+            raise ValueError(f"sequence length {T} must be a multiple of "
+                             f"chunk {chunk}")
         la_chunklocal = jnp.cumsum(
             log_a.reshape(B, T // chunk, chunk, H), axis=2
         ).reshape(B, T, H)

@@ -14,11 +14,10 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import ArchConfig
 from repro.nn.layers import embedding_init, rmsnorm_init, layernorm_init, \
@@ -73,7 +72,9 @@ class TransformerLM:
         kinds = layer_kinds(cfg)
         if cfg.attn_every and cfg.mamba is not None:
             g = cfg.attn_every
-            assert cfg.num_layers % g == 0
+            if cfg.num_layers % g != 0:
+                raise ValueError(f"num_layers {cfg.num_layers} must be a "
+                                 f"multiple of attn_every {g}")
             return kinds[:g], cfg.num_layers // g
         return [kinds[0]], cfg.num_layers
 
@@ -91,8 +92,10 @@ class TransformerLM:
         group_kinds, n_groups = self._group_structure()
 
         if cfg.moe is not None and cfg.moe_every > 1:
-            assert len(group_kinds) % cfg.moe_every == 0, \
-                "group size must divide moe_every for uniform layer scan"
+            if len(group_kinds) % cfg.moe_every != 0:
+                raise ValueError(
+                    "group size must divide moe_every for uniform layer "
+                    f"scan (got {len(group_kinds)} % {cfg.moe_every})")
 
         def init_group(k):
             ks = jax.random.split(k, len(group_kinds))
@@ -252,7 +255,9 @@ class TransformerLM:
         labels = batch["labels"]
 
         chunk = min(LOSS_CHUNK, S)
-        assert S % chunk == 0
+        if S % chunk != 0:
+            raise ValueError(f"sequence length {S} must be a multiple of "
+                             f"the loss chunk {chunk}")
         nchunk = S // chunk
         # unrolled python loop: never materializes (B,S,V) logits, and
         # keeps the lm-head FLOPs visible to XLA cost analysis (a scan

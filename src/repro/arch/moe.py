@@ -73,7 +73,9 @@ def moe_ffn_ep(p, x, moe_cfg, mesh, axis: str = "model", dp_axis=None):
     n_dev = mesh.shape[axis]
     E = moe_cfg.num_experts
     E_pad = max(E, n_dev)
-    assert E_pad % n_dev == 0, (E, n_dev)
+    if E_pad % n_dev != 0:
+        raise ValueError(f"expert count {E} must pad to a multiple of "
+                         f"the device count {n_dev}")
     per_dev = E_pad // n_dev
 
     gates, aux = router_gates(p, x, moe_cfg)               # global (B,S,E)

@@ -145,14 +145,18 @@ def rwkv_time_apply(p, x, rc, norm_eps, cache=None):
     new_cache = None
     if cache is None:
         chunk = min(rc.chunk, T)
-        assert T % chunk == 0
+        if T % chunk != 0:
+            raise ValueError(f"sequence length {T} must be a multiple of "
+                             f"chunk {chunk}")
         o, _ = wkv_chunked(r, k, v, w.astype(jnp.float32), p["bonus_u"],
                            chunk)
     elif T > 1:
         # prefill: fresh chunked pass, cache built from the final state
         # (assumes the incoming cache is zero-initialized)
         chunk = min(rc.chunk, T)
-        assert T % chunk == 0
+        if T % chunk != 0:
+            raise ValueError(f"sequence length {T} must be a multiple of "
+                             f"chunk {chunk}")
         o, S = wkv_chunked(r, k, v, w.astype(jnp.float32), p["bonus_u"],
                            chunk)
         new_cache = {"last": x[:, -1:], "state": S}

@@ -21,8 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.mpgnn import MPGNNModel
-from repro.core.tgar import TGARLayer, combine_messages, tree_take
-from repro.nn.layers import dense_apply
+from repro.core.tgar import combine_messages, tree_take
 
 
 def _stage_masks(block, k):

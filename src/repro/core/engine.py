@@ -29,8 +29,7 @@ tensor.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +38,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.aggregate import ShardContext, combine, get_backend
 from repro.core.mpgnn import MPGNNModel
-from repro.core.partition import PartitionPlan, ShardedGraph
+from repro.core.partition import ShardedGraph
 from repro.core.tgar import TGARLayer, tree_take, NEG
 from repro.kernels.ops import CSCPlan
 from repro.utils.compat import shard_map
@@ -355,6 +354,9 @@ class HybridParallelEngine:
             # (P, n_m_pad, C) aligned with plan.masters
             return infer_jit(params, self._device_data, view)
 
+        # the jitted core is exposed so repro.analysis can trace the
+        # actual compiled computation (fn itself stages host arrays)
+        fn.jitted = infer_jit
         return fn
 
     def gather_predictions(self, logits_sharded) -> np.ndarray:

@@ -9,8 +9,8 @@ unified implementation".
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

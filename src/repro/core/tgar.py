@@ -26,7 +26,7 @@ jnp segment ops below) or ``"csc"`` (the Pallas CSC-blocked kernels in
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

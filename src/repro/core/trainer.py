@@ -494,6 +494,39 @@ class Trainer:
                 f"eval infer was traced {self.trace_counts['infer']} "
                 "times (expected at most 1)")
 
+    # -- static analysis hooks ---------------------------------------------------
+
+    @property
+    def expected_donated(self) -> int:
+        """How many step invars must carry donation flags: the three view
+        leaves (node_active/edge_active/loss_mask) on accelerator
+        backends, none on cpu (where donation is a no-op warning)."""
+        return 3 if self._donate_views else 0
+
+    def traced_step_jaxpr(self, view: GraphView):
+        """Jaxpr of the jitted train step over ``view`` — what
+        ``repro.analysis`` rules walk. Tracing runs the step's Python
+        body (the compile counter), so the counters are saved/restored:
+        analysis must not break the compiled-once certificate."""
+        staged = self.engine.stage_view(shard_view(self.plan, view))
+        saved = dict(self.trace_counts)
+        try:
+            return jax.make_jaxpr(self._step)(
+                self.params, self.opt_state, self.engine._device_data,
+                staged)
+        finally:
+            self.trace_counts = saved
+
+    def traced_infer_jaxpr(self, view: GraphView):
+        """Jaxpr of the jitted eval/infer computation over ``view``."""
+        staged = self.engine.stage_view(shard_view(self.plan, view))
+        saved = dict(self.trace_counts)
+        try:
+            return jax.make_jaxpr(self._infer.jitted)(
+                self.params, self.engine._device_data, staged)
+        finally:
+            self.trace_counts = saved
+
 
 class CompactTrainer:
     """Single-process trainer over size-bucketed compact blocks.
@@ -676,3 +709,21 @@ class CompactTrainer:
                 f"bucket shapes (expected exactly one trace per bucket): "
                 "a view was staged with a shape or plan geometry not "
                 "determined by its bucket")
+
+    # -- static analysis hooks ---------------------------------------------------
+
+    def traced_step_jaxpr(self, view):
+        """Jaxpr of the bucketed step over ``view``'s staged block — what
+        the O(view) compact-step rules walk. Staging and tracing both
+        perturb the contract counters (buckets_touched / trace_counts),
+        so they are saved and restored: analysis must not change the
+        once-per-bucket certificate."""
+        saved_counts = dict(self.trace_counts)
+        saved_buckets = set(self.buckets_touched)
+        try:
+            block = self._prepare(view)
+            return jax.make_jaxpr(self._step)(
+                self.params, self.opt_state, block)
+        finally:
+            self.trace_counts = saved_counts
+            self.buckets_touched = saved_buckets

@@ -514,6 +514,18 @@ class ViewBuilder:
         self._stamp: Optional[np.ndarray] = None
         self._g2l: Optional[np.ndarray] = None
         self._tick = 0
+        # all-ones train fallback for graphs without a train_mask,
+        # allocated once per builder instead of once per cluster build
+        self._all_train: Optional[np.ndarray] = None
+
+    def _train_mask(self, train: Optional[np.ndarray]) -> np.ndarray:
+        if train is not None:
+            return train
+        if self.g.train_mask is not None:
+            return self.g.train_mask
+        if self._all_train is None:
+            self._all_train = np.ones(self.g.num_nodes, bool)
+        return self._all_train
 
     def _next_slot(self) -> _Slot:
         if not self._slots:
@@ -567,9 +579,7 @@ class ViewBuilder:
         member, active = self._member, self._active
         slot.node[:] = active                    # (N,) bool -> (K, N) f32
         slot.edge[:] = active[g.src] & active[g.dst]
-        if train is None:
-            train = (g.train_mask if g.train_mask is not None
-                     else np.ones(g.num_nodes, bool))
+        train = self._train_mask(train)
         np.multiply(member, train, out=slot.loss, casting="unsafe")
         if not slot.loss.any():
             slot.loss[:] = member
@@ -640,9 +650,7 @@ class ViewBuilder:
         src_local = g2l[g.src[eidx]].astype(np.int32)
         dst_local = g2l[g.dst[eidx]].astype(np.int32)
         sorter = np.argsort(dst_local, kind="stable")
-        if train is None:
-            train = (g.train_mask if g.train_mask is not None
-                     else np.ones(g.num_nodes, bool))
+        train = self._train_mask(train)
         labeled = members[train[members]]
         if len(labeled) == 0:
             labeled = members

@@ -94,11 +94,15 @@ def segment_sum_bwd_csc(g: jax.Array, edge_dst: jax.Array, num_edges: int,
     """
     n, d = g.shape
     e_pad = edge_dst.shape[0]
-    assert e_pad % block_e == 0 and e_pad >= num_edges
+    if e_pad % block_e != 0 or e_pad < num_edges:
+        raise ValueError(
+            f"edge_dst pad {e_pad} must be a block_e={block_e} multiple "
+            f"covering num_edges={num_edges}")
     if num_edges == 0:
         return jnp.zeros((0, d), g.dtype)
     bd = block_d or _pick_block_d(d, cap=128)
-    assert d % bd == 0, (d, bd)
+    if d % bd != 0:
+        raise ValueError(f"feature dim {d} not divisible by block_d={bd}")
     # the output is allocated at the true edge count: the final partial
     # block is a masked boundary write (no (E_pad, d) intermediate, no
     # slice, and — as every lane is independent — no pad copies of the
@@ -145,12 +149,19 @@ def segment_max_bwd_csc(g: jax.Array, fwd_out: jax.Array, data: jax.Array,
     """
     n, d = g.shape
     e_pad = edge_dst.shape[0]
-    assert fwd_out.shape == (n, d) and data.shape == (num_edges, d)
-    assert e_pad % block_e == 0 and e_pad >= num_edges
+    if fwd_out.shape != (n, d) or data.shape != (num_edges, d):
+        raise ValueError(
+            f"fwd_out {fwd_out.shape} / data {data.shape} do not match "
+            f"the expected ({n}, {d}) / ({num_edges}, {d})")
+    if e_pad % block_e != 0 or e_pad < num_edges:
+        raise ValueError(
+            f"edge_dst pad {e_pad} must be a block_e={block_e} multiple "
+            f"covering num_edges={num_edges}")
     if num_edges == 0:
         return jnp.zeros((0, d), g.dtype)
     bd = block_d or _pick_block_d(d, cap=128)
-    assert d % bd == 0, (d, bd)
+    if d % bd != 0:
+        raise ValueError(f"feature dim {d} not divisible by block_d={bd}")
     # edge arrays stay at their true length: the final partial block is
     # a boundary block (masked write, padded read) — no pad copy of the
     # saved forward operand per backward call
@@ -220,10 +231,20 @@ def edge_softmax_bwd_csc(g: jax.Array, logits: jax.Array, values: jax.Array,
     """
     n, h, d = g.shape
     e_pad = edge_dst.shape[0]
-    assert logits.shape == (num_edges, h)
-    assert values.shape == (num_edges, h, d)
-    assert m.shape == (n, h) and den.shape == (n, h) and og.shape == (n, h)
-    assert e_pad % block_e == 0 and e_pad >= num_edges
+    if logits.shape != (num_edges, h):
+        raise ValueError(f"logits {logits.shape} do not match the "
+                         f"expected ({num_edges}, {h})")
+    if values.shape != (num_edges, h, d):
+        raise ValueError(f"values {values.shape} do not match the "
+                         f"expected ({num_edges}, {h}, {d})")
+    if m.shape != (n, h) or den.shape != (n, h) or og.shape != (n, h):
+        raise ValueError(
+            f"softmax stats m {m.shape} / den {den.shape} / og {og.shape}"
+            f" do not match the expected ({n}, {h})")
+    if e_pad % block_e != 0 or e_pad < num_edges:
+        raise ValueError(
+            f"edge_dst pad {e_pad} must be a block_e={block_e} multiple "
+            f"covering num_edges={num_edges}")
     if num_edges == 0:
         return (jnp.zeros((0, h), logits.dtype),
                 jnp.zeros((0, h, d), values.dtype))

@@ -109,8 +109,13 @@ def edge_softmax_csc(logits, values, gather_idx, local_ids,
     e, h = logits.shape
     d = values.shape[-1]
     nb, l_pad = gather_idx.shape
-    assert nb == num_blocks and l_pad % block_e == 0
-    assert values.shape == (e, h, d), (values.shape, logits.shape)
+    if nb != num_blocks or l_pad % block_e != 0:
+        raise ValueError(
+            f"plan shape ({nb}, {l_pad}) inconsistent with "
+            f"num_blocks={num_blocks}, block_e={block_e}")
+    if values.shape != (e, h, d):
+        raise ValueError(f"values {values.shape} do not match logits "
+                         f"{logits.shape}: expected ({e}, {h}, {d})")
     if e == 0:
         return (jnp.zeros((num_blocks * block_n, h, d), values.dtype),
                 jnp.full((num_blocks * block_n, h), NEG, jnp.float32),

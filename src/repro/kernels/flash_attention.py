@@ -99,9 +99,12 @@ def flash_attention(q, k, v, *, causal: bool = True, sliding_window: int = 0,
     """
     B, T, H, D = q.shape
     Dv = v.shape[-1]
-    assert T % block_q == 0 and T % block_k == 0
+    if T % block_q != 0 or T % block_k != 0:
+        raise ValueError(f"padded length {T} must be a multiple of "
+                         f"block_q={block_q} and block_k={block_k}")
     seq_len = seq_len or T
-    assert seq_len <= T
+    if seq_len > T:
+        raise ValueError(f"seq_len {seq_len} exceeds padded length {T}")
     sm_scale = 1.0 / np.sqrt(D)
     grid = (B, H, T // block_q, T // block_k)
     spec_q = pl.BlockSpec((1, block_q, 1, D), lambda b, h, q_, k_: (b, q_, h, 0))

@@ -13,6 +13,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.jaxpr import (ContractError, JaxprContext,  # noqa: F401
+                                  check_or_raise,
+                                  count_segment_scatters,  # noqa: F401
+                                  jaxpr_avals, jaxpr_eqns,  # noqa: F401
+                                  run_rules)
 from repro.kernels.backward import (edge_softmax_bwd_csc,
                                     segment_max_bwd_csc,
                                     segment_sum_bwd_csc)
@@ -81,7 +86,10 @@ def build_csc_plan(segment_ids: np.ndarray, num_segments: int,
     l_max = int(lens.max()) if nb else 0
     l_min = max(block_e, ((l_max + block_e - 1) // block_e) * block_e)
     if l_pad:
-        assert l_pad >= l_min and l_pad % block_e == 0, (l_pad, l_min)
+        if l_pad < l_min or l_pad % block_e != 0:
+            raise ValueError(
+                f"forced l_pad={l_pad} must be a block_e={block_e} "
+                f"multiple covering the widest block slice (>= {l_min})")
     else:
         l_pad = l_min
     gather = np.full((nb, l_pad), E, np.int32)          # E = pad lane
@@ -116,9 +124,13 @@ def build_bucket_csc_plan(dst_local: np.ndarray, n_pad: int, e_pad: int,
     pad edges join no gather block; their values are additionally nulled
     by the block's ``edge_mask`` like any padded edge."""
     e = len(dst_local)
-    assert e <= e_pad and (len(dst_local) == 0
-                           or int(dst_local.max()) < n_pad), \
-        (e, e_pad, n_pad)
+    if e > e_pad:
+        raise ValueError(
+            f"{e} edges do not fit the bucket's e_pad={e_pad}")
+    if e and int(dst_local.max()) >= n_pad:
+        raise ValueError(
+            f"destination id {int(dst_local.max())} outside the "
+            f"bucket's n_pad={n_pad}")
     ids = np.full(e_pad, n_pad, np.int32)
     ids[:e] = dst_local
     # worst case all e_pad edges land in one node block: forcing l_pad to
@@ -172,7 +184,9 @@ def segment_sum_op(data: jax.Array, plan: CSCPlan,
                    interpret: bool = True) -> jax.Array:
     """data (E,)/(E, D)/(E, H, D) float -> (num_segments, ...trailing), via
     the Pallas CSC kernel (multi-head messages fold into the lane axis)."""
-    assert data.shape[0] == plan.num_edges
+    if data.shape[0] != plan.num_edges:
+        raise ValueError(f"data edge axis {data.shape[0]} != plan "
+                         f"num_edges {plan.num_edges}")
     flat, trailing = _reshape_to_2d(data)
     out = _segment_reduce_planned(
         flat, jnp.asarray(plan.gather_idx), jnp.asarray(plan.local_ids),
@@ -184,7 +198,9 @@ def segment_max_op(data: jax.Array, plan: CSCPlan,
                    interpret: bool = True) -> jax.Array:
     """Masked segment max; empty segments come back as NEG (callers clamp,
     matching the -inf identity of ``jax.ops.segment_max``)."""
-    assert data.shape[0] == plan.num_edges
+    if data.shape[0] != plan.num_edges:
+        raise ValueError(f"data edge axis {data.shape[0]} != plan "
+                         f"num_edges {plan.num_edges}")
     flat, trailing = _reshape_to_2d(data)
     out = _segment_reduce_planned(
         flat, jnp.asarray(plan.gather_idx), jnp.asarray(plan.local_ids),
@@ -208,7 +224,9 @@ def segment_sum_bwd_op(g: jax.Array, plan: CSCPlan,
     """Backward of :func:`segment_sum_op`: g (num_segments, ...trailing)
     -> (E, ...trailing) via the plan-driven gather kernel (segment-sum is
     linear, so d_data[e] = g[dst[e]])."""
-    assert g.shape[0] == plan.num_segments
+    if g.shape[0] != plan.num_segments:
+        raise ValueError(f"cotangent segment axis {g.shape[0]} != plan "
+                         f"num_segments {plan.num_segments}")
     flat, trailing = _reshape_to_2d(g)
     out = _segment_sum_bwd_planned(flat, jnp.asarray(plan.edge_dst),
                                    plan.num_edges, plan.block_e, interpret)
@@ -227,8 +245,12 @@ def segment_max_bwd_op(g: jax.Array, fwd_out: jax.Array, data: jax.Array,
                        plan: CSCPlan, interpret: bool = True) -> jax.Array:
     """Backward of :func:`segment_max_op`: the gather kernel plus the
     in-kernel argmax-hit mask against the saved forward output."""
-    assert g.shape[0] == plan.num_segments
-    assert data.shape[0] == plan.num_edges
+    if g.shape[0] != plan.num_segments:
+        raise ValueError(f"cotangent segment axis {g.shape[0]} != plan "
+                         f"num_segments {plan.num_segments}")
+    if data.shape[0] != plan.num_edges:
+        raise ValueError(f"data edge axis {data.shape[0]} != plan "
+                         f"num_edges {plan.num_edges}")
     gf, trailing = _reshape_to_2d(g)
     ff, _ = _reshape_to_2d(fwd_out)
     df, _ = _reshape_to_2d(data)
@@ -237,103 +259,36 @@ def segment_max_bwd_op(g: jax.Array, fwd_out: jax.Array, data: jax.Array,
     return out.reshape((plan.num_edges,) + trailing)
 
 
-def jaxpr_eqns(closed_jaxpr, skip_pallas_bodies: bool = False):
-    """Yield every equation, recursing into sub-jaxprs (pjit bodies,
-    custom_vjp calls, scans, pallas kernel bodies ...) — including the
-    VJP jaxprs ``jax.grad``/``jax.value_and_grad`` splice in, so the
-    fused-path contracts below certify the backward pass too.
-
-    ``skip_pallas_bodies`` stops the recursion at ``pallas_call``
-    equations: the gather/scatter fallback checks must not flag the
-    kernels' own on-chip block gathers (whose tile shapes can collide
-    with the edge/segment dims, e.g. when E == block_e)."""
-    import jax.core as jcore
-    stack = [closed_jaxpr.jaxpr if hasattr(closed_jaxpr, "jaxpr")
-             else closed_jaxpr]
-    while stack:
-        jaxpr = stack.pop()
-        for eqn in jaxpr.eqns:
-            yield eqn
-            if skip_pallas_bodies and eqn.primitive.name == "pallas_call":
-                continue
-            for val in eqn.params.values():
-                for sub in (val if isinstance(val, (tuple, list))
-                            else (val,)):
-                    if isinstance(sub, jcore.ClosedJaxpr):
-                        stack.append(sub.jaxpr)
-                    elif isinstance(sub, jcore.Jaxpr):
-                        stack.append(sub)
-
-
-def jaxpr_avals(closed_jaxpr):
-    """Yield the output aval of every equation, recursing into sub-jaxprs.
-
-    Verification hook for the fused-gather contract: the bench and the
-    kernel tests walk the csc path's jaxpr and assert that no equation
-    materializes a ``(nb, L_pad, D)`` pre-gathered message tensor.
-    """
-    for eqn in jaxpr_eqns(closed_jaxpr):
-        for var in eqn.outvars:
-            yield var.aval
+# ---------------------------------------------------------------------------
+# contract shims — the jaxpr walkers and Sum-stage asserts moved to the
+# repro.analysis rule registry (version-robust jaxpr_eqns, Finding
+# records, the ``python -m repro.analysis`` CI gate). These delegating
+# shims keep the historical ops-level API; the assert_* helpers raise
+# ContractError (an AssertionError subclass), so existing
+# ``pytest.raises(AssertionError)`` callers keep passing.
+# ---------------------------------------------------------------------------
 
 
 def assert_pregather_free(closed_jaxpr, plan: CSCPlan):
-    """Assert the traced computation never allocates a tensor shaped like
-    the pre-gathered (nb, L_pad, ...) message layout the fused kernels
-    eliminated — including the 2-D *float* (nb, L_pad) layout the old
-    edge-softmax path used for gathered logits. The integer 2-D plan
-    index arrays (gather_idx/local_ids) are expected and allowed."""
-    nb, l_pad = plan.gather_idx.shape
-    for aval in jaxpr_avals(closed_jaxpr):
-        shape = tuple(getattr(aval, "shape", ()))
-        if len(shape) < 2 or shape[:2] != (nb, l_pad):
-            continue
-        pregather = len(shape) >= 3 or jnp.issubdtype(
-            getattr(aval, "dtype", jnp.int32), jnp.floating)
-        assert not pregather, (
-            f"pre-gathered message tensor {shape} found in jaxpr "
-            f"(plan: nb={nb}, L_pad={l_pad})")
-
-
-_SCATTER_PRIMS = ("scatter", "scatter-add", "scatter-max", "scatter-min",
-                  "scatter-mul")
-
-
-def _is_segment_scatter(eqn, num_edges: int) -> bool:
-    """A scatter whose updates carry the plan's edge axis — the signature
-    of a reference ``jax.ops.segment_*`` call (forward or transpose)."""
-    if eqn.primitive.name not in _SCATTER_PRIMS:
-        return False
-    upd = tuple(getattr(eqn.invars[-1].aval, "shape", ()))
-    return bool(upd) and upd[0] == num_edges
-
-
-def count_segment_scatters(closed_jaxpr, plan: CSCPlan) -> int:
-    """Number of scatter equations whose updates carry the plan's edge
-    axis — the signature of a reference ``jax.ops.segment_*`` call (its
-    transpose/forward scatters (E, ...) updates into segment rows).
-
-    On model-level jaxprs this can't distinguish a Sum-stage fallback
-    from the legitimate NN-Gather transpose (both scatter edge-axis
-    cotangents onto nodes), so the end-to-end certificate compares the
-    count across backends (csc strictly below reference) while the
-    combine-level certificate (:func:`assert_sum_stage_fused`) demands
-    zero.
-    """
-    return sum(_is_segment_scatter(eqn, plan.num_edges)
-               for eqn in jaxpr_eqns(closed_jaxpr,
-                                     skip_pallas_bodies=True))
+    """Shim over the ``jaxpr.pregather`` registry rule: the traced
+    computation never allocates a tensor shaped like the pre-gathered
+    (nb, L_pad, ...) message layout the fused kernels eliminated —
+    including the 2-D *float* (nb, L_pad) layout the old edge-softmax
+    path used for gathered logits. The integer 2-D plan index arrays
+    (gather_idx/local_ids) are expected and allowed."""
+    check_or_raise(run_rules(JaxprContext(closed_jaxpr, plan=plan),
+                             ids=["jaxpr.pregather"]))
 
 
 def assert_sum_stage_fused(closed_jaxpr, plan: CSCPlan):
-    """The full Sum-stage contract on the csc path, forward AND backward:
+    """Shim over the full Sum-stage ruleset on the csc path, forward AND
+    backward:
 
-    1. pre-gather-free — no ``(nb, L_pad, ...)`` float tensor anywhere
-       (:func:`assert_pregather_free`);
-    2. no reference segment scatter — no scatter primitive whose updates
+    1. ``jaxpr.pregather`` — no ``(nb, L_pad, ...)`` float tensor;
+    2. ``jaxpr.segment-scatter`` — no scatter primitive whose updates
        carry the edge axis (the forward fallback's ``.at[ids].add/max``
        and the softmax recompute's segment passes);
-    3. no reference backward gather — no gather primitive mapping the
+    3. ``jaxpr.backward-gather`` — no gather primitive mapping the
        segment axis onto the edge axis outside the kernels (the old
        ``g[segment_ids]`` backward); the fused backward reads cotangents
        through the kernels' on-chip gather from the scalar-prefetched
@@ -345,22 +300,10 @@ def assert_sum_stage_fused(closed_jaxpr, plan: CSCPlan):
     axis in NN-Gather — use :func:`count_segment_scatters` across
     backends there, plus the pre-gather walk which stays exact.)
     """
-    assert_pregather_free(closed_jaxpr, plan)
-    E, N = plan.num_edges, plan.num_segments
-    # the kernels' own on-chip gathers are block-shaped and legitimate —
-    # skip pallas bodies so they can't collide (e.g. when E == block_e)
-    for eqn in jaxpr_eqns(closed_jaxpr, skip_pallas_bodies=True):
-        name = eqn.primitive.name
-        if name in _SCATTER_PRIMS:
-            assert not _is_segment_scatter(eqn, E), (
-                f"reference segment scatter ({name}) found on the csc "
-                f"path (E={E})")
-        elif name == "gather":
-            src = tuple(getattr(eqn.invars[0].aval, "shape", ()))
-            out = tuple(getattr(eqn.outvars[0].aval, "shape", ()))
-            assert not (out and src and out[0] == E and src[0] == N), (
-                f"reference backward gather ({src} -> {out}) found on "
-                f"the csc path (E={E}, N={N})")
+    check_or_raise(run_rules(
+        JaxprContext(closed_jaxpr, plan=plan),
+        ids=["jaxpr.pregather", "jaxpr.segment-scatter",
+             "jaxpr.backward-gather"]))
 
 
 # ---------------------------------------------------------------------------
@@ -447,8 +390,10 @@ def _edge_softmax_planned(logits, values, gather_idx, local_ids,
 def _lift_single_head(logits, values):
     if logits.ndim == 1:
         return logits[:, None], values[:, None, :], True
-    assert logits.ndim == 2 and values.ndim == 3, (logits.shape,
-                                                   values.shape)
+    if logits.ndim != 2 or values.ndim != 3:
+        raise ValueError(
+            f"expected (E, H) logits with (E, H, D) values, got "
+            f"{logits.shape} / {values.shape}")
     return logits, values, False
 
 
@@ -471,7 +416,9 @@ def edge_softmax_fwd_op(logits: jax.Array, values: jax.Array,
     """:func:`edge_softmax_op` plus the kernel's per-destination softmax
     stats: returns (out, m (num_segments, H), den (num_segments, H)) —
     the residuals the fused backward needs to rebuild p_e in-kernel."""
-    assert logits.shape[0] == plan.num_edges
+    if logits.shape[0] != plan.num_edges:
+        raise ValueError(f"logits edge axis {logits.shape[0]} != plan "
+                         f"num_edges {plan.num_edges}")
     g_idx = jnp.asarray(plan.gather_idx)
     l_ids = jnp.asarray(plan.local_ids)
     lg, vals, single = _lift_single_head(logits, values)
@@ -504,7 +451,9 @@ def edge_softmax_bwd_op(g: jax.Array, logits: jax.Array, values: jax.Array,
     kernel (never an (E, H) tensor in HBM) and no reference segment pass
     runs.
     """
-    assert logits.shape[0] == plan.num_edges
+    if logits.shape[0] != plan.num_edges:
+        raise ValueError(f"logits edge axis {logits.shape[0]} != plan "
+                         f"num_edges {plan.num_edges}")
     lg, vals, single = _lift_single_head(logits, values)
     if single:
         g, out = g[:, None, :], out[:, None, :]

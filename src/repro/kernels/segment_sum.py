@@ -85,6 +85,13 @@ Host-side planning (``build_csc_plan`` in ops.py) computes the padded
 edge-slice layout once per graph — the paper's "reused CSR/CSC indexing"
 (§4.2): views/batches reuse the plan, only messages change.
 
+The budget arithmetic above is not only documentation: the static
+analyzer in :mod:`repro.analysis.vmem` recomputes per-``pallas_call``
+block residency + peak temporary bytes from a traced jaxpr and flags any
+kernel whose footprint exceeds the budget (``vmem.budget`` rule; CLI
+``python -m repro.analysis --strict``). Changing a block geometry here
+without re-checking the tables trips that gate in CI.
+
 These kernels are wired into the forward paths through the Sum-stage
 backend registry in :mod:`repro.core.aggregate`: selecting the ``"csc"``
 :class:`~repro.core.aggregate.AggregationBackend` routes the combine of
@@ -168,7 +175,10 @@ def segment_sum_csc(data: jax.Array, gather_idx: jax.Array,
     """
     e, d = data.shape
     nb, l_pad = gather_idx.shape
-    assert nb == num_blocks and l_pad % block_e == 0
+    if nb != num_blocks or l_pad % block_e != 0:
+        raise ValueError(
+            f"plan shape ({nb}, {l_pad}) inconsistent with "
+            f"num_blocks={num_blocks}, block_e={block_e}")
     if e == 0:
         return jnp.zeros((num_blocks * block_n, d), data.dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -231,11 +241,15 @@ def segment_max_csc(data: jax.Array, gather_idx: jax.Array,
     """
     e, d = data.shape
     nb, l_pad = gather_idx.shape
-    assert nb == num_blocks and l_pad % block_e == 0
+    if nb != num_blocks or l_pad % block_e != 0:
+        raise ValueError(
+            f"plan shape ({nb}, {l_pad}) inconsistent with "
+            f"num_blocks={num_blocks}, block_e={block_e}")
     if e == 0:
         return jnp.full((num_blocks * block_n, d), NEG, data.dtype)
     bd = block_d or _pick_block_d(d)
-    assert d % bd == 0, (d, bd)
+    if d % bd != 0:
+        raise ValueError(f"feature dim {d} not divisible by block_d={bd}")
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         # d-tiles OUTERMOST so the (E, BD) message block is fetched once

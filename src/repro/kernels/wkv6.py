@@ -82,7 +82,9 @@ def wkv6(r, k, v, w, u, *, chunk: int = 64, interpret: bool = False):
     """
     B, T, H, K = r.shape
     V = v.shape[-1]
-    assert T % chunk == 0, (T, chunk)
+    if T % chunk != 0:
+        raise ValueError(f"sequence length {T} must be a multiple of "
+                         f"chunk={chunk}")
     nc = T // chunk
     spec_k = pl.BlockSpec((1, chunk, 1, K), lambda b, h, c: (b, c, h, 0))
     spec_v = pl.BlockSpec((1, chunk, 1, V), lambda b, h, c: (b, c, h, 0))

@@ -15,7 +15,9 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(model_parallel: int = 1):
     """Whatever devices exist locally (tests / examples)."""
     n = len(jax.devices())
-    assert n % model_parallel == 0
+    if n % model_parallel != 0:
+        raise ValueError(f"device count {n} must be a multiple of "
+                         f"model_parallel {model_parallel}")
     return jax.make_mesh((n // model_parallel, model_parallel),
                          ("data", "model"))
 

@@ -24,7 +24,9 @@ def split_batch(batch: dict, n_micro: int) -> dict:
     for k, v in batch.items():
         ax = _BATCH_AXIS.get(k, 0)
         b = v.shape[ax]
-        assert b % n_micro == 0, (k, v.shape, n_micro)
+        if b % n_micro != 0:
+            raise ValueError(f"batch axis of {k} ({v.shape}) must be a "
+                             f"multiple of n_micro={n_micro}")
         new_shape = (v.shape[:ax] + (n_micro, b // n_micro)
                      + v.shape[ax + 1:])
         v = v.reshape(new_shape)

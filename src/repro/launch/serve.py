@@ -15,7 +15,7 @@ import argparse
 import sys
 import time
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -86,7 +86,9 @@ class BatchServer:
         return jnp.asarray(toks), max_p
 
     def run(self, requests: List[Request]) -> ServerStats:
-        assert len(requests) <= self.batch_size
+        if len(requests) > self.batch_size:
+            raise ValueError(f"{len(requests)} requests exceed the "
+                             f"server batch size {self.batch_size}")
         reqs = list(requests)
         toks, plen = self._pad_prompts(reqs)
         t0 = time.perf_counter()

@@ -17,7 +17,7 @@ rules work for every assigned architecture.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import numpy as np

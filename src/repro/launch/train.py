@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import GNNConfig, TrainConfig, get_arch_config
+from repro.config import GNNConfig, get_arch_config
 from repro.utils import get_logger
 
 log = get_logger("train")

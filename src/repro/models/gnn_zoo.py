@@ -63,7 +63,9 @@ def sage_layer(in_dim: int, out_dim: int, activation: bool = True,
     """GraphSAGE with a pluggable neighbor aggregator: ``aggregate`` is any
     non-attention combine mode ("mean" default; "max" = max-pooling SAGE,
     "sum" = GIN-flavored)."""
-    assert aggregate in ("mean", "max", "sum"), aggregate
+    if aggregate not in ("mean", "max", "sum"):
+        raise ValueError(f"unknown aggregate {aggregate!r}: expected "
+                         "'mean', 'max' or 'sum'")
 
     def init(key):
         k1, k2 = jax.random.split(key)
@@ -93,7 +95,9 @@ def sage_layer(in_dim: int, out_dim: int, activation: bool = True,
 def gat_layer(in_dim: int, out_dim: int, heads: int = 4,
               activation: bool = True, name: str = "gat") -> TGARLayer:
     hd = out_dim // heads
-    assert hd * heads == out_dim, "out_dim must divide heads"
+    if hd * heads != out_dim:
+        raise ValueError(f"out_dim {out_dim} must be divisible by "
+                         f"heads {heads}")
 
     def init(key):
         ks = jax.random.split(key, 4)
@@ -132,7 +136,9 @@ def gat_layer(in_dim: int, out_dim: int, heads: int = 4,
 def gat_e_layer(in_dim: int, out_dim: int, edge_dim: int, heads: int = 4,
                 activation: bool = True, name: str = "gat_e") -> TGARLayer:
     hd = out_dim // heads
-    assert hd * heads == out_dim
+    if hd * heads != out_dim:
+        raise ValueError(f"out_dim {out_dim} must be divisible by "
+                         f"heads {heads}")
 
     def init(key):
         ks = jax.random.split(key, 6)

@@ -5,7 +5,6 @@ All functions are pure; KV caches are explicit pytrees threaded through
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ is what lets the launcher shard m/v the same way as weights (FSDP).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

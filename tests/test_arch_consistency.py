@@ -7,7 +7,7 @@ import pytest
 
 from conftest import arch_params, run_with_devices
 from repro.arch import build_model
-from repro.config import get_arch_config, MambaConfig, RWKVConfig
+from repro.config import get_arch_config, MambaConfig
 
 ARCH_PARAMS = arch_params()   # heavyweight archs marked slow (conftest)
 

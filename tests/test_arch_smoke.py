@@ -9,7 +9,7 @@ import pytest
 
 import repro.arch.model as arch_model
 from repro.arch import build_model, layer_kinds
-from repro.config import ASSIGNED_ARCHS, INPUT_SHAPES, get_arch_config
+from repro.config import ASSIGNED_ARCHS, get_arch_config
 
 from conftest import arch_params
 

@@ -3,7 +3,6 @@ interleave, SWA variants, whisper encoder-memory reuse."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.arch import build_model, layer_kinds
 from repro.config import get_arch_config

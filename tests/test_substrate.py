@@ -3,7 +3,6 @@
 The hypothesis property sweep lives in test_substrate_properties.py
 (guarded by ``pytest.importorskip`` — hypothesis is a dev-only extra).
 """
-import os
 
 import jax
 import jax.numpy as jnp

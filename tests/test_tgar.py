@@ -9,9 +9,9 @@ import numpy as np
 import pytest
 
 from repro.config import GNNConfig
-from repro.core.mpgnn import forward_block, loss_block
-from repro.core.strategies import global_batch_view, mini_batch_views
-from repro.graph import make_dataset, build_block, sbm_graph
+from repro.core.mpgnn import loss_block
+from repro.core.strategies import mini_batch_views
+from repro.graph import build_block, sbm_graph
 from repro.graph.csr import Graph
 from repro.models import make_gnn
 
