@@ -20,6 +20,13 @@ repro.analysis`` gate):
     ``.num_edges``). Parity oracles (``bfs_layers_loop``,
     ``cluster_view_recompute``) are deliberately outside the hot set.
 
+``src.silent-except``
+    An ``except`` whose body is only ``pass`` (or ``...``) swallows the
+    error with no trace — in a fault-tolerant runtime every discarded
+    exception is a recovery decision and must be visible (retry it,
+    count it, log it, or re-raise). Deliberate best-effort cleanup
+    paths carry a waiver comment explaining why discarding is correct.
+
 Waiving a finding: append ``# lint: waive=<rule-id>`` to the flagged
 line (comma-separate several ids; ``all`` waives every rule). Waivers
 are for documented one-off fallback paths — e.g. the scratch-buffer
@@ -168,6 +175,33 @@ class _Linter(ast.NodeVisitor):
             "src.bare-assert", node.lineno,
             "bare assert in library code (vanishes under python -O) — "
             "raise ValueError/TypeError with a message instead")
+        self.generic_visit(node)
+
+    def visit_ExceptHandler(self, node: ast.ExceptHandler):
+        body = [n for n in node.body
+                if not (isinstance(n, ast.Expr)
+                        and isinstance(n.value, ast.Constant)
+                        and isinstance(n.value.value, str))]  # docstrings
+        silent = all(
+            isinstance(n, ast.Pass)
+            or (isinstance(n, ast.Expr)
+                and isinstance(n.value, ast.Constant)
+                and n.value.value is Ellipsis)
+            for n in body)
+        if silent:
+            # a waiver reads most naturally next to the ``pass`` itself,
+            # so accept it on the handler line or any body line
+            lines = [node.lineno] + [n.lineno for n in node.body]
+            if not any(_waived(self.waivers, ln, "src.silent-except")
+                       for ln in lines):
+                what = (ast.unparse(node.type) if node.type is not None
+                        else "everything")
+                self._emit(
+                    "src.silent-except", node.lineno,
+                    f"except {what} with a pass-only body swallows the "
+                    "error invisibly — handle it (retry/count/log/raise) "
+                    "or waive with a comment saying why discarding is "
+                    "correct")
         self.generic_visit(node)
 
     def visit_Call(self, node: ast.Call):

@@ -1,3 +1,7 @@
-from repro.checkpoint.store import save_checkpoint, load_checkpoint, latest_step
+from repro.checkpoint.store import (CheckpointCorruptError,
+                                    checkpoint_steps, latest_step,
+                                    load_checkpoint, save_checkpoint,
+                                    verify_checkpoint)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["CheckpointCorruptError", "checkpoint_steps", "latest_step",
+           "load_checkpoint", "save_checkpoint", "verify_checkpoint"]

@@ -221,10 +221,21 @@ class HybridParallelEngine:
                 [p.edge_dst for p in plans]))
         return data
 
-    def stage_view(self, view_arrays: dict):
+    def stage_view(self, view_arrays: dict, retry=None):
+        """Stage sharded view arrays onto the device mesh. With a
+        :class:`repro.runtime.faults.Retrier`, the device_put batch is a
+        retryable ``device_put`` stage — transfers are idempotent (host
+        arrays are unchanged by a failed put), so a transient staging
+        failure re-stages the same view."""
         shd = lambda a: jax.device_put(
             a, NamedSharding(self.mesh, P(self.axis)))
-        return {k: shd(v) for k, v in view_arrays.items()}
+
+        def put():
+            return {k: shd(v) for k, v in view_arrays.items()}
+
+        if retry is None:
+            return put()
+        return retry("device_put", put)
 
     def default_view_arrays(self):
         plan = self.plan

@@ -31,6 +31,22 @@ distributed ``infer``; checkpoints go through
 :mod:`repro.checkpoint.store` and restores resume mid-stream without
 triggering a retrace.
 
+**Fault tolerance** (:mod:`repro.runtime`): both trainers take a
+``fault_policy`` (retry/backoff, per-stage timeouts, divergence action)
+and an optional ``injector`` (deterministic chaos for tests). View
+builds, device staging, step dispatch and checkpoint saves become
+retryable units; prefetch workers are supervised (killed workers
+respawn, their claimed view indices requeue, emit order is preserved);
+``check_finite`` guards each step's loss and ``on_divergence`` picks
+``raise | skip_view | rollback`` (rollback restores the last valid
+checkpoint and continues past the poison view — no retrace, because the
+restored leaves match the compiled step's signature).
+``fit(..., resume=True)`` auto-resumes from the newest *valid*
+checkpoint in ``checkpoint_dir``. Because every retried unit is a pure
+function of its inputs, the loss trajectory under injected faults is
+bit-identical to a fault-free run — the chaos contract
+``tests/test_faults.py`` asserts.
+
 Usage::
 
     engine = HybridParallelEngine(model, build_partitions(g, P))
@@ -42,10 +58,10 @@ Usage::
 from __future__ import annotations
 
 import itertools
+import math
 import os
-import queue
 import threading
-from typing import Any, Iterable, Iterator, Optional
+from typing import Any, Iterable, Optional
 
 import jax
 import numpy as np
@@ -53,178 +69,68 @@ import numpy as np
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.core.strategies import GraphView, shard_view
 from repro.core.views import CompactBlockBuilder, ViewStream
+from repro.runtime.faults import (DivergenceError, FaultInjector,
+                                  FaultPolicy, Retrier, sync_with_timeout)
+from repro.runtime.prefetch import StreamPrefetcher, ViewPrefetcher
+
+# the pipelines moved to repro.runtime.prefetch (where supervision
+# lives); these aliases keep the long-standing private import paths of
+# tests/benches working
+_ViewPrefetcher = ViewPrefetcher
+_MultiStreamPrefetcher = StreamPrefetcher
 
 
 class RetraceError(AssertionError):
     """The compiled-once contract was broken (or never exercised)."""
 
 
-class _ViewPrefetcher:
-    """Double-buffered host pipeline.
+def _make_runtime(fault_policy: Optional[FaultPolicy],
+                  injector: Optional[FaultInjector]) -> Optional[Retrier]:
+    """A Retrier when any fault handling is configured, else None (the
+    zero-overhead production default)."""
+    if fault_policy is None and injector is None:
+        return None
+    return Retrier(fault_policy or FaultPolicy(), injector)
 
-    A daemon thread pulls GraphViews from the iterator, runs ``prepare``
-    (vectorized ``shard_view`` + ``device_put``) and parks up to ``depth``
-    staged views in a bounded queue, so staging for step *i+1* overlaps
-    device compute for step *i*. Exceptions in the thread re-raise in the
-    consumer; exhaustion is signalled with a sentinel.
+
+def _handle_divergence(tr, prev, loss_val: float,
+                       checkpoint_dir: Optional[str],
+                       events: list) -> None:
+    """Apply ``tr.runtime.policy.on_divergence`` to a non-finite step.
+    ``prev`` is the pre-step (params, opt_state, step_num) — the poison
+    update is always discarded first (jax arrays are immutable, so the
+    held refs ARE the pre-step state). Shared by both trainers; ``tr``
+    needs params/opt_state/step_num/view_cursor/restore/_resume_cursor.
     """
-
-    _END = object()
-
-    def __init__(self, views: Iterable[GraphView], prepare, depth: int = 2):
-        self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
-        self._err: Optional[BaseException] = None
-        self._cancel = threading.Event()
-        self._thread = threading.Thread(
-            target=self._run, args=(views, prepare), daemon=True,
-            name="view-prefetch")
-        self._thread.start()
-
-    def _put(self, item) -> bool:
-        """Bounded put that gives up when the consumer cancelled (so an
-        abandoned fit can't leave the thread pinning staged buffers)."""
-        while not self._cancel.is_set():
+    tr.params, tr.opt_state, tr.step_num = prev
+    action = tr.runtime.policy.on_divergence
+    events.append({"stage": "diverge", "step": prev[2] + 1,
+                   "loss": loss_val, "action": action,
+                   "view_cursor": tr.view_cursor})
+    if action == "skip_view":
+        return   # poison view consumed, update discarded — move on
+    if action == "rollback":
+        if checkpoint_dir:
             try:
-                self._q.put(item, timeout=0.1)
-                return True
-            except queue.Full:
-                continue
-        return False
-
-    def _run(self, views, prepare):
-        try:
-            for v in views:
-                if self._cancel.is_set() or not self._put(prepare(v)):
-                    return
-        except BaseException as e:  # noqa: BLE001 — surfaced in __next__
-            self._err = e
-        finally:
-            self._put(self._END)
-
-    def close(self):
-        """Unblock and retire the producer thread; staged-but-unconsumed
-        views are dropped."""
-        self._cancel.set()
-        while True:   # drain so a blocked _put wakes immediately
-            try:
-                self._q.get_nowait()
-            except queue.Empty:
-                break
-        self._thread.join(timeout=5)
-
-    def __iter__(self) -> Iterator:
-        return self
-
-    def __next__(self):
-        item = self._q.get()
-        if item is self._END:
-            self._thread.join()
-            if self._err is not None:
-                raise self._err
-            raise StopIteration
-        return item
-
-
-class _MultiStreamPrefetcher:
-    """Worker-pool pipeline over an indexable :class:`ViewStream`.
-
-    ``workers`` threads each own a private ViewBuilder and claim view
-    indices from a shared counter; finished (built + sharded + staged)
-    views land in a reorder buffer and are emitted strictly in index
-    order. Since ``stream.build(i)`` derives its RNG from ``(seed, i)``,
-    the emitted sequence is bit-identical to sequential construction no
-    matter how the OS schedules the workers.
-
-    Run-ahead is bounded: no worker starts index i until
-    ``i - emitted < depth + workers - 1``, so at most ~depth staged views
-    wait in the buffer while every worker stays busy. The stream's cursor
-    advances only as views are *emitted* (not as they are built), which is
-    what makes the cursor checkpointable mid-pipeline.
-    """
-
-    def __init__(self, stream: ViewStream, prepare, steps: Optional[int],
-                 workers: int = 1, depth: int = 2):
-        self._stream = stream
-        self._start = stream.cursor
-        left = (None if stream.length is None
-                else max(0, stream.length - self._start))
-        if steps is None:
-            self._limit = left
-        else:
-            self._limit = steps if left is None else min(steps, left)
-        self._prepare = prepare
-        self._cond = threading.Condition()
-        self._results: dict = {}
-        self._next_build = 0
-        self._emitted = 0
-        self._err: Optional[BaseException] = None
-        self._cancel = False
-        # materialize the graph's lazy CSC index before the fan-out so
-        # worker-thread builders never race the unlocked cache
-        stream.g.csc()
-        workers = max(1, workers)
-        self._max_ahead = max(1, depth) + workers - 1
-        self._threads = [
-            threading.Thread(target=self._work, daemon=True,
-                             name=f"view-stream-{w}")
-            for w in range(workers)]
-        for t in self._threads:
-            t.start()
-
-    def _work(self):
-        try:
-            builder = self._stream.make_builder()
-            while True:
-                with self._cond:
-                    while (not self._cancel and self._err is None
-                           and (self._limit is None
-                                or self._next_build < self._limit)
-                           and (self._next_build - self._emitted
-                                >= self._max_ahead)):
-                        self._cond.wait()
-                    if (self._cancel or self._err is not None
-                            or (self._limit is not None
-                                and self._next_build >= self._limit)):
-                        return
-                    i = self._next_build
-                    self._next_build += 1
-                item = self._prepare(
-                    self._stream.build(self._start + i, builder))
-                with self._cond:
-                    self._results[i] = item
-                    self._cond.notify_all()
-        except BaseException as e:  # noqa: BLE001 — surfaced in __next__
-            with self._cond:
-                if self._err is None:
-                    self._err = e
-                self._cond.notify_all()
-
-    def close(self):
-        with self._cond:
-            self._cancel = True
-            self._results.clear()
-            self._cond.notify_all()
-        for t in self._threads:
-            t.join(timeout=5)
-
-    def __iter__(self) -> Iterator:
-        return self
-
-    def __next__(self):
-        with self._cond:
-            if self._limit is not None and self._emitted >= self._limit:
-                raise StopIteration
-            while self._emitted not in self._results and self._err is None:
-                self._cond.wait()
-            if self._emitted not in self._results:
-                err = self._err
-                raise err
-            item = self._results.pop(self._emitted)
-            self._emitted += 1
-            self._cond.notify_all()
-        # cursor = views handed to the consumer, exact for checkpointing
-        self._stream.seek(self._start + self._emitted)
-        return item
+                # load_checkpoint(None) already falls back past any
+                # corrupt file to the newest valid step
+                tr.restore(checkpoint_dir)
+            except FileNotFoundError:
+                # no checkpoint yet — fall through to the raise below
+                pass  # lint: waive=src.silent-except
+            else:
+                # mid-fit: the stream already stands past the poison
+                # view; the armed resume cursor must not rewind a
+                # LATER fit to the checkpoint's older position
+                tr._resume_cursor = None
+                return
+        raise DivergenceError(
+            f"non-finite loss {loss_val} at step {prev[2] + 1} with "
+            "on_divergence='rollback' but no valid checkpoint to "
+            "roll back to (pass checkpoint_dir and checkpoint_every)")
+    raise DivergenceError(
+        f"non-finite loss {loss_val} at step {prev[2] + 1} "
+        f"(view cursor {tr.view_cursor})")
 
 
 class Trainer:
@@ -240,10 +146,16 @@ class Trainer:
     """
 
     def __init__(self, engine, opt, params: Optional[Any] = None,
-                 seed: int = 0, prefetch_depth: int = 2):
+                 seed: int = 0, prefetch_depth: int = 2,
+                 fault_policy: Optional[FaultPolicy] = None,
+                 injector: Optional[FaultInjector] = None):
         self.engine = engine
         self.opt = opt
         self.plan = engine.plan
+        # fault-tolerance runtime: None = production fast path (no retry
+        # wrappers, no per-step loss sync). The injector only ever fires
+        # on host-side supervision points — traced code never sees it.
+        self.runtime = _make_runtime(fault_policy, injector)
         if params is None:
             params = engine.model.init(jax.random.PRNGKey(seed),
                                        engine.sg.feature_dim)
@@ -293,11 +205,24 @@ class Trainer:
             checkpoint_every: int = 0,
             checkpoint_dir: Optional[str] = None,
             max_in_flight: int = 2,
-            log_every: int = 0, log=print) -> dict:
+            log_every: int = 0, log=print,
+            resume: bool = False) -> dict:
         """Run ``steps`` views (all of ``views`` if None) through the
-        compiled step. Returns ``{"losses", "evals", "steps"}``; losses
-        are synced once at the end so per-step host/device overlap is
-        never serialized by a blocking ``float()``.
+        compiled step. Returns ``{"losses", "evals", "steps", "events"}``;
+        losses are synced once at the end so per-step host/device overlap
+        is never serialized by a blocking ``float()``.
+
+        ``resume=True`` restores the newest *valid* checkpoint in
+        ``checkpoint_dir`` before training (fresh start if there is
+        none) and fast-forwards a ViewStream to its recorded cursor.
+        With a ``fault_policy`` whose ``check_finite`` is on (or whose
+        ``on_divergence`` is not ``"raise"``), each step's loss is
+        synced and guarded: a non-finite loss triggers the policy's
+        divergence action — ``skip_view`` discards the poison update,
+        ``rollback`` restores the last valid checkpoint and continues
+        past the poison view (no retrace: restored leaves match the
+        compiled signature). A ``step`` timeout in the policy arms a
+        watchdog around the loss sync.
 
         When ``views`` is an indexable :class:`ViewStream` (what
         ``strategy_views`` returns) and ``prefetch`` is on, view
@@ -316,8 +241,15 @@ class Trainer:
         once — deep run-ahead piles up device memory and (on CPU) slows
         the executor more than the overlap buys.
         """
+        rt = self.runtime
+        if resume and checkpoint_dir:
+            from repro.checkpoint import latest_step
+            if latest_step(checkpoint_dir) is not None:
+                self.restore(checkpoint_dir)
+        # shard staging retries transient device_put failures when a
+        # runtime is configured (engine-side hook)
         stage = lambda v: self.engine.stage_view(  # noqa: E731
-            shard_view(self.plan, v))
+            shard_view(self.plan, v), retry=rt)
         if self._donate_views:
             # donated buffers are consumed by the step — always restage
             prepare = stage
@@ -344,13 +276,18 @@ class Trainer:
         # any fit consumes a pending restore cursor — a plain-iterator fit
         # must not leave it armed to silently fast-forward a later,
         # unrelated stream
-        resume, self._resume_cursor = self._resume_cursor, None
-        if stream is not None and resume is not None \
-                and stream.cursor < resume:
+        resume_cur, self._resume_cursor = self._resume_cursor, None
+        if stream is not None and resume_cur is not None \
+                and stream.cursor < resume_cur:
             # a checkpoint restore recorded where the view stream stood —
             # fast-forward the stream itself (per-index RNG makes the
             # cursor the entire stream state)
-            stream.seek(resume)
+            stream.seek(resume_cur)
+        # non-prefetch paths run prepare inline; with a runtime it is
+        # still a retryable view_build stage (the prefetchers wrap their
+        # own build+prepare internally)
+        prep = prepare if rt is None else (
+            lambda v: rt("view_build", lambda: prepare(v)))
         if stream is not None:
             # indexable stream: the worker pool path (workers=1 is the
             # double-buffered pipeline with exact cursor accounting)
@@ -360,34 +297,73 @@ class Trainer:
                         1, min(4, (os.cpu_count() or 2) - 1))
                 staged_iter = _MultiStreamPrefetcher(
                     stream, prepare, steps, workers=prefetch_workers,
-                    depth=self.prefetch_depth)
+                    depth=self.prefetch_depth, runtime=rt)
             else:
                 bounded = (itertools.islice(stream, steps)
                            if steps is not None else stream)
-                staged_iter = (prepare(v) for v in bounded)
+                staged_iter = (prep(v) for v in bounded)
         else:
             if steps is not None:
                 views = itertools.islice(views, steps)
             staged_iter = (_ViewPrefetcher(views, prepare,
-                                           self.prefetch_depth)
-                           if prefetch else (prepare(v) for v in views))
+                                           self.prefetch_depth,
+                                           runtime=rt)
+                           if prefetch else (prep(v) for v in views))
 
+        policy = rt.policy if rt is not None else None
+        inj = rt.injector if rt is not None else None
+        # the finite guard syncs every loss (serializes the pipeline) —
+        # on only when asked for, or when a non-raise divergence action
+        # implies it must observe the loss to act
+        guard = policy is not None and (policy.check_finite
+                                        or policy.on_divergence != "raise")
+        watchdog = policy.timeout("step") if policy is not None else None
+        sync_now = guard or watchdog is not None
+        events = rt.events if rt is not None else []
         data = self.engine._device_data
         losses, pending, evals = [], [], []
         try:
-            for staged in staged_iter:
+            # idx counts views consumed THIS fit — monotonic even across
+            # a rollback (which rewinds step_num), so a keyed "diverge"
+            # injection fires exactly once per poison view
+            for idx, staged in enumerate(staged_iter):
                 if max_in_flight > 0 and len(pending) >= max_in_flight:
                     # backpressure: wait on the oldest in-flight step (one
                     # scalar readiness wait, not a pipeline-wide sync) and
                     # retire its loss to a host float so live device
                     # arrays stay O(max_in_flight), not O(steps)
                     losses.append(float(pending.pop(0)))
-                self.params, self.opt_state, loss = self._step(
-                    self.params, self.opt_state, data, staged)
+                # pre-step refs: jax arrays are immutable, so holding the
+                # old (params, opt_state) costs nothing and is the whole
+                # skip_view recovery
+                prev = (self.params, self.opt_state, self.step_num)
+                if rt is None:
+                    self.params, self.opt_state, loss = self._step(
+                        self.params, self.opt_state, data, staged)
+                else:
+                    # step dispatch is a retryable stage too: a transient
+                    # failure re-dispatches the same (params, staged) —
+                    # deterministic by construction
+                    self.params, self.opt_state, loss = rt(
+                        "step", lambda: self._step(
+                            self.params, self.opt_state, data, staged),
+                        key=self.step_num)
                 self.step_num += 1
                 self.view_cursor = (stream.cursor if stream is not None
                                     else self.step_num)
-                pending.append(loss)
+                if sync_now:
+                    loss_val = sync_with_timeout(
+                        lambda: float(loss), watchdog)
+                    if inj is not None and inj.fires(
+                            "diverge", key=idx):
+                        loss_val = float("nan")   # simulated divergence
+                    if guard and not math.isfinite(loss_val):
+                        self._diverged(prev, loss_val, checkpoint_dir,
+                                       events)
+                        continue
+                    losses.append(loss_val)
+                else:
+                    pending.append(loss)
                 if (eval_every and eval_view is not None
                         and self.step_num % eval_every == 0):
                     rec = {"step": self.step_num, "loss": float(loss),
@@ -406,7 +382,12 @@ class Trainer:
                 staged_iter.close()
         losses.extend(float(l) for l in pending)
         self.history.extend(evals)
-        return {"losses": losses, "evals": evals, "steps": self.step_num}
+        return {"losses": losses, "evals": evals, "steps": self.step_num,
+                "events": list(events)}
+
+    def _diverged(self, prev, loss_val: float,
+                  checkpoint_dir: Optional[str], events: list) -> None:
+        _handle_divergence(self, prev, loss_val, checkpoint_dir, events)
 
     # -- eval / infer -----------------------------------------------------------
 
@@ -434,12 +415,23 @@ class Trainer:
         # view_cursor is the entire state of a per-index ViewStream (the
         # RNG stream of view i is derived from (seed, i)), so storing it
         # lets restore() fast-forward the stream itself
-        return save_checkpoint(directory, self.step_num, {
-            "params": self.params,
-            "opt_state": self.opt_state,
-            "step": np.asarray(self.step_num, np.int64),
-            "view_cursor": np.asarray(self.view_cursor, np.int64),
-        })
+        rt = self.runtime
+        keep = rt.policy.keep_checkpoints if rt is not None else 0
+
+        def do():
+            return save_checkpoint(directory, self.step_num, {
+                "params": self.params,
+                "opt_state": self.opt_state,
+                "step": np.asarray(self.step_num, np.int64),
+                "view_cursor": np.asarray(self.view_cursor, np.int64),
+            }, keep=keep)
+
+        if rt is None:
+            return do()
+        # a failed save never poisons disk (atomic rename) — retry it.
+        # Saves are sequential host calls, so the injector's occurrence
+        # counter is already deterministic (no key needed)
+        return rt("checkpoint_save", do)
 
     def restore(self, directory: str, step: Optional[int] = None) -> int:
         """Load params/opt state/step from a checkpoint. The restored
@@ -448,7 +440,12 @@ class Trainer:
         ``fit`` over a :class:`ViewStream` fast-forwards the stream to it
         automatically; for plain iterators the returned step lets the
         caller fast-forward by hand (legacy behavior)."""
-        ck = load_checkpoint(directory, step)
+        rt = self.runtime
+        if rt is None:
+            ck = load_checkpoint(directory, step)
+        else:
+            ck = rt("checkpoint_load",
+                    lambda: load_checkpoint(directory, step))
         self.params = ck["params"]
         self.opt_state = ck["opt_state"]
         self.step_num = int(ck["step"])
@@ -546,11 +543,14 @@ class CompactTrainer:
 
     def __init__(self, model, g, opt, params: Optional[Any] = None,
                  seed: int = 0, buckets=None, slots: int = 2,
-                 gcn_norm: bool = True, prefetch_depth: int = 2):
+                 gcn_norm: bool = True, prefetch_depth: int = 2,
+                 fault_policy: Optional[FaultPolicy] = None,
+                 injector: Optional[FaultInjector] = None):
         from repro.core.mpgnn import accuracy_block, loss_block
         self.model = model
         self.g = g
         self.opt = opt
+        self.runtime = _make_runtime(fault_policy, injector)
         backend = getattr(model, "aggregate_backend", "reference")
         self.stager = CompactBlockBuilder(
             g, model.K, buckets=buckets, slots=slots, gcn_norm=gcn_norm,
@@ -565,6 +565,8 @@ class CompactTrainer:
         self.history: list = []
         self.prefetch_depth = prefetch_depth
         self.trace_counts = {"train_step": 0}
+        self.view_cursor = 0
+        self._resume_cursor: Optional[int] = None
         # (n_pad, e_pad) shapes actually staged — the denominator of the
         # once-per-bucket contract
         self.buckets_touched: set = set()
@@ -609,12 +611,26 @@ class CompactTrainer:
     def fit(self, views, steps: Optional[int] = None, prefetch: bool = True,
             prefetch_workers: Optional[int] = None, eval_every: int = 0,
             eval_view=None, eval_mask: Optional[np.ndarray] = None,
-            max_in_flight: int = 2, log_every: int = 0, log=print) -> dict:
+            checkpoint_every: int = 0, checkpoint_dir: Optional[str] = None,
+            max_in_flight: int = 2, log_every: int = 0, log=print,
+            resume: bool = False) -> dict:
         """Run ``steps`` views through the bucketed step; same contract
         and return shape as :meth:`Trainer.fit` (losses synced at the
         end, ViewStreams get the deterministic multi-worker prefetch,
-        plain iterators the double-buffered pipeline)."""
+        plain iterators the double-buffered pipeline, the same
+        checkpoint / resume / divergence handling)."""
+        rt = self.runtime
+        if resume and checkpoint_dir:
+            from repro.checkpoint import latest_step
+            if latest_step(checkpoint_dir) is not None:
+                self.restore(checkpoint_dir)
         stream = views if isinstance(views, ViewStream) else None
+        resume_cur, self._resume_cursor = self._resume_cursor, None
+        if stream is not None and resume_cur is not None \
+                and stream.cursor < resume_cur:
+            stream.seek(resume_cur)
+        prep = self._prepare if rt is None else (
+            lambda v: rt("view_build", lambda: self._prepare(v)))
         if stream is not None:
             if prefetch:
                 if prefetch_workers is None:
@@ -622,28 +638,58 @@ class CompactTrainer:
                         1, min(4, (os.cpu_count() or 2) - 1))
                 staged_iter = _MultiStreamPrefetcher(
                     stream, self._prepare, steps, workers=prefetch_workers,
-                    depth=self.prefetch_depth)
+                    depth=self.prefetch_depth, runtime=rt)
             else:
                 bounded = (itertools.islice(stream, steps)
                            if steps is not None else stream)
-                staged_iter = (self._prepare(v) for v in bounded)
+                staged_iter = (prep(v) for v in bounded)
         else:
             if steps is not None:
                 views = itertools.islice(views, steps)
             staged_iter = (_ViewPrefetcher(views, self._prepare,
-                                           self.prefetch_depth)
+                                           self.prefetch_depth,
+                                           runtime=rt)
                            if prefetch else
-                           (self._prepare(v) for v in views))
+                           (prep(v) for v in views))
 
+        policy = rt.policy if rt is not None else None
+        inj = rt.injector if rt is not None else None
+        guard = policy is not None and (policy.check_finite
+                                        or policy.on_divergence != "raise")
+        watchdog = policy.timeout("step") if policy is not None else None
+        sync_now = guard or watchdog is not None
+        events = rt.events if rt is not None else []
         losses, pending, evals = [], [], []
         try:
-            for staged in staged_iter:
+            # idx: monotonic per-fit view count (see Trainer.fit)
+            for idx, staged in enumerate(staged_iter):
                 if max_in_flight > 0 and len(pending) >= max_in_flight:
                     losses.append(float(pending.pop(0)))
-                self.params, self.opt_state, loss = self._step(
-                    self.params, self.opt_state, staged)
+                prev = (self.params, self.opt_state, self.step_num)
+                if rt is None:
+                    self.params, self.opt_state, loss = self._step(
+                        self.params, self.opt_state, staged)
+                else:
+                    self.params, self.opt_state, loss = rt(
+                        "step", lambda: self._step(
+                            self.params, self.opt_state, staged),
+                        key=self.step_num)
                 self.step_num += 1
-                pending.append(loss)
+                self.view_cursor = (stream.cursor if stream is not None
+                                    else self.step_num)
+                if sync_now:
+                    loss_val = sync_with_timeout(
+                        lambda: float(loss), watchdog)
+                    if inj is not None and inj.fires(
+                            "diverge", key=idx):
+                        loss_val = float("nan")   # simulated divergence
+                    if guard and not math.isfinite(loss_val):
+                        _handle_divergence(self, prev, loss_val,
+                                           checkpoint_dir, events)
+                        continue
+                    losses.append(loss_val)
+                else:
+                    pending.append(loss)
                 if (eval_every and eval_view is not None
                         and self.step_num % eval_every == 0):
                     rec = {"step": self.step_num, "loss": float(loss),
@@ -653,13 +699,52 @@ class CompactTrainer:
                         log(f"step {rec['step']:5d}  "
                             f"loss {rec['loss']:.4f}  "
                             f"eval_acc {rec['eval_acc']:.4f}")
+                if (checkpoint_every and checkpoint_dir
+                        and self.step_num % checkpoint_every == 0):
+                    self.save(checkpoint_dir)
         finally:
             if isinstance(staged_iter,
                           (_ViewPrefetcher, _MultiStreamPrefetcher)):
                 staged_iter.close()
         losses.extend(float(l) for l in pending)
         self.history.extend(evals)
-        return {"losses": losses, "evals": evals, "steps": self.step_num}
+        return {"losses": losses, "evals": evals, "steps": self.step_num,
+                "events": list(events)}
+
+    # -- checkpointing ---------------------------------------------------------
+
+    def save(self, directory: str) -> str:
+        rt = self.runtime
+        keep = rt.policy.keep_checkpoints if rt is not None else 0
+
+        def do():
+            return save_checkpoint(directory, self.step_num, {
+                "params": self.params,
+                "opt_state": self.opt_state,
+                "step": np.asarray(self.step_num, np.int64),
+                "view_cursor": np.asarray(self.view_cursor, np.int64),
+            }, keep=keep)
+
+        if rt is None:
+            return do()
+        return rt("checkpoint_save", do)
+
+    def restore(self, directory: str, step: Optional[int] = None) -> int:
+        """Load params/opt state/step; restored leaf shapes match the
+        per-bucket compiled steps, so resuming does not retrace."""
+        rt = self.runtime
+        if rt is None:
+            ck = load_checkpoint(directory, step)
+        else:
+            ck = rt("checkpoint_load",
+                    lambda: load_checkpoint(directory, step))
+        self.params = ck["params"]
+        self.opt_state = ck["opt_state"]
+        self.step_num = int(ck["step"])
+        if "view_cursor" in ck:
+            self.view_cursor = int(ck["view_cursor"])
+            self._resume_cursor = self.view_cursor
+        return self.step_num
 
     # -- eval -------------------------------------------------------------------
 
@@ -692,6 +777,8 @@ class CompactTrainer:
         self.opt_state = self.opt.init(params)
         self.step_num = 0
         self.history = []
+        self.view_cursor = 0
+        self._resume_cursor = None
 
     def assert_compiled_per_bucket(self):
         """The bucketed trace-count contract: the step must have been

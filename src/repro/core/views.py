@@ -38,6 +38,7 @@ parity oracle and benchmark baseline.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, replace
 from typing import Iterator, Optional, Sequence
 
@@ -352,18 +353,46 @@ class CompactBlockBuilder:
         self._rings: dict = {}     # (n_pad, e_pad) -> [_CompactSlot, ...]
         self._turns: dict = {}
         self.stages = 0
+        # views too large for every configured bucket (degraded to an
+        # escalation shape rather than crashing mid-training)
+        self.overflows = 0
+        self._warned_overflow = False
+
+    def _pick(self, view) -> tuple:
+        """The view's bucket — degrading gracefully on overflow: a view
+        too large for every configured bucket escalates to a
+        power-of-two shape covering it (capped at graph capacity). The
+        escalated shape behaves as one extra bucket (compiles once,
+        counted in ``overflows``, warned about once) instead of killing
+        a long training run over one oversized cluster."""
+        try:
+            return self.buckets.pick(view.num_nodes, view.num_edges)
+        except ValueError:
+            self.overflows += 1
+            if not self._warned_overflow:
+                self._warned_overflow = True
+                warnings.warn(
+                    f"CompactView ({view.num_nodes} nodes, "
+                    f"{view.num_edges} edges) overflows every bucket "
+                    f"{list(self.buckets.shapes)}; escalating to a "
+                    "power-of-two shape at most graph capacity. Supply "
+                    "a BucketSpec with a larger top bucket to avoid the "
+                    "extra compile.", RuntimeWarning, stacklevel=3)
+            n = min(_ceil_pow2(view.num_nodes), self.g.num_nodes)
+            e = min(_ceil_pow2(view.num_edges), self.g.num_edges)
+            return (max(n, view.num_nodes), max(e, view.num_edges))
 
     def bucket_for(self, view) -> tuple:
         if isinstance(view, GraphView):   # dense: its own full-graph shape
             return (view.graph.num_nodes, view.graph.num_edges)
-        return self.buckets.pick(view.num_nodes, view.num_edges)
+        return self._pick(view)
 
     def stage(self, view) -> GraphBlock:
         self.stages += 1
         if isinstance(view, GraphView):
             return view.as_block(gcn_norm=self.gcn_norm,
                                  csc_plan=self.csc_plan)
-        shape = self.buckets.pick(view.num_nodes, view.num_edges)
+        shape = self._pick(view)
         ring = self._rings.setdefault(shape, [])
         if len(ring) < self.slots:
             ring.append(_CompactSlot(self.g, self.K, *shape))

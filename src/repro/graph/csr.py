@@ -230,5 +230,7 @@ try:
     import jax as _jax
     _jax.tree_util.register_pytree_node(GraphBlock, _block_flatten,
                                         _block_unflatten)
-except ImportError:  # numpy-only contexts
-    pass
+except ImportError:
+    # numpy-only contexts: graph I/O works without jax, blocks just
+    # aren't pytrees there
+    pass  # lint: waive=src.silent-except

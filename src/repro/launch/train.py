@@ -38,7 +38,9 @@ def train_gnn(dataset: str, model_name: str, strategy: str, steps: int,
               use_engine: Optional[int] = None,
               partition_method: str = "1d_src",
               prefetch_workers: Optional[int] = None,
-              compact: bool = False) -> dict:
+              compact: bool = False, fault_policy=None,
+              checkpoint_dir: Optional[str] = None,
+              checkpoint_every: int = 0, resume: bool = False) -> dict:
     from repro.graph import make_dataset
     from repro.models import make_gnn
     from repro.core.mpgnn import loss_block, accuracy_block
@@ -94,13 +96,16 @@ def train_gnn(dataset: str, model_name: str, strategy: str, steps: int,
         sg = build_partitions(g, use_engine, method=partition_method,
                               gcn_norm=gcn_norm)
         engine = HybridParallelEngine(model, sg)
-        trainer = Trainer(engine, opt, params=params)
+        trainer = Trainer(engine, opt, params=params,
+                          fault_policy=fault_policy)
         gbv = global_batch_view(g, cfg.num_layers)
         mask = test_mask.astype(np.float32)
         t0 = time.perf_counter()
         out = trainer.fit(views, steps=steps, eval_every=eval_every,
                           eval_view=gbv, eval_mask=mask,
                           prefetch_workers=prefetch_workers,
+                          checkpoint_every=checkpoint_every,
+                          checkpoint_dir=checkpoint_dir, resume=resume,
                           log_every=1, log=log.info)
         wall = time.perf_counter() - t0
         trainer.assert_compiled_once()
@@ -116,18 +121,27 @@ def train_gnn(dataset: str, model_name: str, strategy: str, steps: int,
                 "params": trainer.params, "final_acc": final_acc,
                 "model": model, "graph": g}
 
-    if compact:
+    # checkpoint/fault flags need a supervised trainer; the bucketed
+    # trainer accepts dense views too (one full-graph bucket), so route
+    # runtime-flagged single-process runs through it rather than
+    # silently dropping the flags on the bare jit loop below
+    needs_runtime = (fault_policy is not None or bool(checkpoint_dir)
+                     or checkpoint_every > 0 or resume)
+    if compact or needs_runtime:
         # bucketed compact path: CompactTrainer stages each view into a
         # small fixed menu of padded shapes (compiled once per bucket)
         from repro.core.trainer import CompactTrainer
         trainer = CompactTrainer(model, g, opt, params=params,
-                                 gcn_norm=gcn_norm)
+                                 gcn_norm=gcn_norm,
+                                 fault_policy=fault_policy)
         gbv = global_batch_view(g, cfg.num_layers)
         mask = test_mask.astype(np.float32)
         t0 = time.perf_counter()
         out = trainer.fit(views, steps=steps, eval_every=eval_every,
                           eval_view=gbv, eval_mask=mask,
                           prefetch_workers=prefetch_workers,
+                          checkpoint_every=checkpoint_every,
+                          checkpoint_dir=checkpoint_dir, resume=resume,
                           log_every=1, log=log.info)
         wall = time.perf_counter() - t0
         trainer.assert_compiled_per_bucket()
@@ -265,6 +279,52 @@ def main(argv=None):
                    help="compact sampled-subgraph views (relabeled "
                         "local-id blocks, size-bucketed padding) for "
                         "mini/cluster; dense masks stay the parity oracle")
+    ft = g.add_argument_group(
+        "fault tolerance",
+        "supervised training runtime (repro.runtime): retries with "
+        "capped exponential backoff, divergence recovery, hardened "
+        "checkpoints. Off by default (zero overhead); any flag here "
+        "enables the runtime (single-process runs switch to the "
+        "bucketed trainer, which handles dense views too).")
+    ft.add_argument("--fault-retries", type=int, default=None,
+                    metavar="N",
+                    help="retry transient view-build / staging / step / "
+                         "checkpoint failures up to N times (default "
+                         "policy: 3)")
+    ft.add_argument("--fault-backoff", type=float, default=None,
+                    metavar="SECONDS",
+                    help="base backoff before the first retry; grows "
+                         "exponentially with deterministic jitter "
+                         "(default 0.05s, capped at 2s)")
+    ft.add_argument("--on-divergence", default=None,
+                    choices=["raise", "skip_view", "rollback"],
+                    help="reaction to a non-finite loss: raise (default),"
+                         " skip_view (discard the poison update and move "
+                         "on), or rollback (restore the last valid "
+                         "checkpoint and continue past the poison view)")
+    ft.add_argument("--check-finite", action="store_true",
+                    help="sync and guard every step's loss (serializes "
+                         "the step pipeline; implied by a non-raise "
+                         "--on-divergence)")
+    ft.add_argument("--step-timeout", type=float, default=None,
+                    metavar="SECONDS",
+                    help="watchdog: fail loudly if a step's loss is not "
+                         "available within this many seconds")
+    ft.add_argument("--checkpoint-dir", default=None,
+                    help="directory for step_<N>.npz checkpoints "
+                         "(atomic, checksummed; required by "
+                         "--on-divergence rollback)")
+    ft.add_argument("--checkpoint-every", type=int, default=0,
+                    metavar="STEPS",
+                    help="save a checkpoint every N steps (0 = never)")
+    ft.add_argument("--resume", action="store_true",
+                    help="resume from the newest VALID checkpoint in "
+                         "--checkpoint-dir (corrupt files are skipped); "
+                         "fresh start if none")
+    ft.add_argument("--keep-checkpoints", type=int, default=0,
+                    metavar="K",
+                    help="retain only the newest K checkpoints "
+                         "(0 = keep all)")
     lm = sub.add_parser("lm")
     lm.add_argument("--arch", required=True)
     lm.add_argument("--steps", type=int, default=50)
@@ -275,12 +335,31 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if args.cmd == "gnn":
+        fault_policy = None
+        ft_flags = (args.fault_retries, args.fault_backoff,
+                    args.on_divergence, args.step_timeout)
+        if args.check_finite or any(f is not None for f in ft_flags):
+            from repro.runtime import FaultPolicy
+            kw = {"check_finite": args.check_finite,
+                  "keep_checkpoints": args.keep_checkpoints}
+            if args.fault_retries is not None:
+                kw["max_retries"] = args.fault_retries
+            if args.fault_backoff is not None:
+                kw["backoff_base"] = args.fault_backoff
+            if args.on_divergence is not None:
+                kw["on_divergence"] = args.on_divergence
+            if args.step_timeout is not None:
+                kw["timeouts"] = {"step": args.step_timeout}
+            fault_policy = FaultPolicy(**kw)
         out = train_gnn(args.dataset, args.model, args.strategy, args.steps,
                         hidden=args.hidden, num_layers=args.layers,
                         use_engine=args.engine_partitions or None,
                         partition_method=args.partition_method,
                         prefetch_workers=args.prefetch_workers,
-                        compact=args.compact)
+                        compact=args.compact, fault_policy=fault_policy,
+                        checkpoint_dir=args.checkpoint_dir,
+                        checkpoint_every=args.checkpoint_every,
+                        resume=args.resume)
         print(f"final test acc: {out['final_acc']:.4f} "
               f"({out['wall_s']:.1f}s)")
     else:

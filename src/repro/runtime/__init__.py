@@ -1,0 +1,22 @@
+"""Fault-tolerant training runtime: supervision, retry, and recovery.
+
+The layer between the trainers and everything that can fail — view
+construction, device staging, step execution, checkpoint I/O. See
+:mod:`repro.runtime.faults` (policy / injection / retry),
+:mod:`repro.runtime.prefetch` (supervised prefetch pipelines), and
+``python -m repro.runtime.chaos`` (the chaos harness CI runs).
+"""
+from repro.runtime.faults import (DivergenceError, FaultInjector,
+                                  FaultPolicy, FaultRetriesExceeded,
+                                  InjectedFault, PrefetchShutdownError,
+                                  Retrier, StepTimeoutError,
+                                  TransientError, WorkerKilled,
+                                  sync_with_timeout)
+from repro.runtime.prefetch import StreamPrefetcher, ViewPrefetcher
+
+__all__ = [
+    "DivergenceError", "FaultInjector", "FaultPolicy",
+    "FaultRetriesExceeded", "InjectedFault", "PrefetchShutdownError",
+    "Retrier", "StepTimeoutError", "StreamPrefetcher", "TransientError",
+    "ViewPrefetcher", "WorkerKilled", "sync_with_timeout",
+]

@@ -1,0 +1,227 @@
+"""Chaos harness: prove the fault-tolerant runtime's contracts by
+running real training twice — fault-free vs. under deterministic
+injected faults — and requiring the loss trajectories **bit-identical**.
+
+CI runs two lanes:
+
+- ``python -m repro.runtime.chaos --smoke`` (fast lane): one combined
+  scenario per trainer — a killed prefetch worker, failed view builds,
+  a failed device staging and a failed checkpoint save, all in one fit.
+- ``python -m repro.runtime.chaos`` (nightly): the full sweep over
+  injection point x policy combinations, plus the divergence-recovery
+  scenarios (skip_view / rollback) which change the trajectory by
+  design and are checked for their recovery semantics instead.
+
+Exit code 0 iff every scenario holds. Each scenario also re-certifies
+the compiled-once / compiled-per-bucket contract — recovery must never
+retrace.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+
+import numpy as np
+
+from repro.runtime.faults import FaultInjector, FaultPolicy
+
+
+# quiet, fast policy for chaos runs: no real sleeping between retries
+FAST = dict(backoff_base=0.0, backoff_cap=0.0, jitter=0.0)
+
+
+def _graph(n=160, seed=0):
+    from repro.graph import sbm_graph
+    return sbm_graph(num_nodes=n, num_classes=4, feature_dim=8,
+                     p_in=0.05, p_out=0.005, seed=seed).add_self_loops()
+
+
+def _engine_trainer(g, fault_policy=None, injector=None, seed=0):
+    from repro.config import GNNConfig
+    from repro.core.engine import HybridParallelEngine
+    from repro.core.partition import build_partitions
+    from repro.core.trainer import Trainer
+    from repro.models import make_gnn
+    cfg = GNNConfig(model="gcn", num_layers=2, hidden_dim=16,
+                    num_classes=4, feature_dim=8)
+    engine = HybridParallelEngine(make_gnn(cfg), build_partitions(g, 1))
+    return Trainer(engine, _adam(), seed=seed, fault_policy=fault_policy,
+                   injector=injector)
+
+
+def _compact_trainer(g, fault_policy=None, injector=None, seed=0,
+                     backend="reference"):
+    from repro.config import GNNConfig
+    from repro.core.trainer import CompactTrainer
+    from repro.models import make_gnn
+    cfg = GNNConfig(model="gcn", num_layers=2, hidden_dim=16,
+                    num_classes=4, feature_dim=8,
+                    aggregate_backend=backend)
+    return CompactTrainer(make_gnn(cfg), g, _adam(), seed=seed,
+                          fault_policy=fault_policy, injector=injector)
+
+
+def _adam():
+    from repro.optim import adam
+    return adam(1e-2)
+
+
+def _views(g, seed=0, compact=False):
+    from repro.core.strategies import strategy_views
+    return strategy_views(g, "mini", K=2, seed=seed, batch_nodes=24,
+                          compact=compact)
+
+
+def _fit(trainer, g, steps, compact=False, workers=2, **kw):
+    out = trainer.fit(_views(g, compact=compact), steps=steps,
+                      prefetch_workers=workers, **kw)
+    return out
+
+
+def run_scenario(name: str, plan: dict, trainer_kind: str = "engine",
+                 policy_kw: dict = None, steps: int = 8,
+                 backend: str = "reference", verbose=print) -> bool:
+    """One chaos scenario: baseline vs injected run, bit-identical
+    trajectory required (plus: the faults actually fired, and the
+    compile contracts held). Returns pass/fail."""
+    g = _graph()
+    compact = trainer_kind == "compact"
+    make = _compact_trainer if compact else _engine_trainer
+    mk_kw = {"backend": backend} if compact else {}
+
+    base = make(g, **mk_kw)
+    ref = _fit(base, g, steps, compact=compact)["losses"]
+
+    policy = FaultPolicy(**{**FAST, **(policy_kw or {})})
+    inj = FaultInjector(plan, seed=0, hang_seconds=0.5)
+    tr = make(g, fault_policy=policy, injector=inj, **mk_kw)
+    with tempfile.TemporaryDirectory() as d:
+        out = _fit(tr, g, steps, compact=compact, checkpoint_dir=d,
+                   checkpoint_every=3)
+    got = out["losses"]
+
+    ok = True
+    if inj.total_fired() == 0:
+        verbose(f"  [{name}] FAIL: no fault fired (plan {plan})")
+        ok = False
+    if list(map(float, got)) != list(map(float, ref)):
+        verbose(f"  [{name}] FAIL: trajectory diverged\n"
+                f"    ref {ref}\n    got {got}")
+        ok = False
+    try:
+        if compact:
+            tr.assert_compiled_per_bucket()
+        else:
+            tr.assert_compiled_once()
+    except AssertionError as e:
+        verbose(f"  [{name}] FAIL: compile contract broken: {e}")
+        ok = False
+    if ok:
+        verbose(f"  [{name}] ok ({inj.total_fired()} faults injected, "
+                f"{len(got)} steps bit-identical)")
+    return ok
+
+
+def run_divergence(name: str, action: str, trainer_kind: str = "engine",
+                   steps: int = 8, verbose=print) -> bool:
+    """Divergence-recovery scenario: inject a simulated non-finite loss
+    and check the policy's action recovered the run (these change the
+    trajectory by design, so the check is semantic, not bitwise)."""
+    g = _graph()
+    compact = trainer_kind == "compact"
+    make = _compact_trainer if compact else _engine_trainer
+    policy = FaultPolicy(on_divergence=action, **FAST)
+    inj = FaultInjector({"diverge": {4}}, seed=0)
+    tr = make(g, fault_policy=policy, injector=inj)
+    with tempfile.TemporaryDirectory() as d:
+        out = _fit(tr, g, steps, compact=compact, checkpoint_dir=d,
+                   checkpoint_every=2)
+    ok = True
+    diverges = [e for e in out["events"] if e.get("stage") == "diverge"]
+    if len(diverges) != 1:
+        verbose(f"  [{name}] FAIL: expected 1 divergence event, got "
+                f"{len(diverges)}")
+        ok = False
+    if not all(np.isfinite(out["losses"])):
+        verbose(f"  [{name}] FAIL: non-finite loss leaked into history")
+        ok = False
+    # the poison step's update was discarded / rolled back, yet the fit
+    # ran to completion over the remaining views
+    if out["steps"] < steps - 1:
+        verbose(f"  [{name}] FAIL: fit stopped at step {out['steps']}")
+        ok = False
+    try:
+        if compact:
+            tr.assert_compiled_per_bucket()
+        else:
+            tr.assert_compiled_once()
+    except AssertionError as e:
+        verbose(f"  [{name}] FAIL: compile contract broken: {e}")
+        ok = False
+    if ok:
+        verbose(f"  [{name}] ok (1 divergence, action={action}, "
+                f"{out['steps']} steps completed)")
+    return ok
+
+
+SMOKE_PLAN = {
+    "worker_kill": {1},          # kill the worker building view 1
+    "view_build": {2},           # fail view 2's build (retried)
+    "device_put": {0},           # fail one staging batch (retried)
+    "checkpoint_save": {0},      # fail the first save attempt (retried)
+}
+
+# nightly: every injection point alone, then paired with tighter policies
+SWEEP_POINTS = ("view_build", "device_put", "step", "checkpoint_save",
+                "worker_kill")
+SWEEP_POLICIES = {
+    "default": {},
+    "retries1": {"max_retries": 1},
+    "finite": {"check_finite": True},
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="chaos harness for the fault-tolerant runtime")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast-lane subset: one combined scenario per "
+                         "trainer + one rollback e2e")
+    ap.add_argument("--steps", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    results = []
+    print("chaos: baseline-vs-injected trajectory invariance")
+    if args.smoke:
+        results.append(run_scenario(
+            "smoke/engine", SMOKE_PLAN, "engine", steps=args.steps))
+        results.append(run_scenario(
+            "smoke/compact", SMOKE_PLAN, "compact", steps=args.steps))
+        results.append(run_divergence(
+            "smoke/rollback", "rollback", "engine", steps=args.steps))
+    else:
+        for point in SWEEP_POINTS:
+            for pname, pkw in SWEEP_POLICIES.items():
+                occ = {1} if point == "worker_kill" else {0, 2}
+                results.append(run_scenario(
+                    f"{point}/{pname}", {point: occ}, "engine",
+                    policy_kw=pkw, steps=args.steps))
+        results.append(run_scenario(
+            "combined/engine", SMOKE_PLAN, "engine", steps=args.steps))
+        for backend in ("reference", "csc"):
+            results.append(run_scenario(
+                f"combined/compact-{backend}", SMOKE_PLAN, "compact",
+                steps=args.steps, backend=backend))
+        for action in ("skip_view", "rollback"):
+            for kind in ("engine", "compact"):
+                results.append(run_divergence(
+                    f"diverge/{action}/{kind}", action, kind,
+                    steps=args.steps))
+    passed = sum(results)
+    print(f"chaos: {passed}/{len(results)} scenarios passed")
+    return 0 if passed == len(results) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

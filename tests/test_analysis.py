@@ -192,6 +192,37 @@ def test_srclint_waiver():
     assert len(findings) == 1 and findings[0].location.endswith(":3")
 
 
+def test_srclint_silent_except_flagged():
+    src = ("def f():\n"
+           "    try:\n"
+           "        g()\n"
+           "    except OSError:\n"
+           "        pass\n"
+           "    try:\n"
+           "        g()\n"
+           "    except Exception:\n"
+           "        ...\n")
+    findings = lint_source(src, "fixture.py")
+    assert _rule_ids(findings) == {"src.silent-except"}
+    assert len(findings) == 2
+    # a handler that does anything with the error is fine
+    ok = ("def f():\n"
+          "    try:\n"
+          "        g()\n"
+          "    except OSError:\n"
+          "        return None\n")
+    assert lint_source(ok, "fixture.py") == []
+
+
+def test_srclint_silent_except_waiver_on_pass_line():
+    src = ("def f():\n"
+           "    try:\n"
+           "        g()\n"
+           "    except OSError:\n"
+           "        pass  # lint: waive=src.silent-except\n")
+    assert lint_source(src, "fixture.py") == []
+
+
 # ---------------------------------------------------------------------------
 # zero findings on the real thing
 # ---------------------------------------------------------------------------

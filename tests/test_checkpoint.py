@@ -1,0 +1,239 @@
+"""Hardened checkpoint store (PR 8): atomic checksummed writes, typed
+corruption detection, newest-valid fallback, retention, tmp cleanup.
+
+Every corruption mode the runtime's rollback path can meet — truncated
+npz, missing manifest, flipped leaf bytes, a stale ``.tmp`` from a
+crashed save — must surface as :class:`CheckpointCorruptError` (never a
+bare ``zipfile``/``KeyError``), and the resume path must silently fall
+back to the newest checkpoint that actually verifies.
+"""
+import json
+import os
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointCorruptError, checkpoint_steps,
+                              latest_step, load_checkpoint,
+                              save_checkpoint, verify_checkpoint)
+
+
+def _tree(step):
+    return {"params": {"w": np.arange(6, dtype=np.float32) + step,
+                       "b": np.zeros(3, np.float32)},
+            "step": np.asarray(step, np.int64)}
+
+
+def _path(d, step):
+    return os.path.join(str(d), f"step_{step:08d}.npz")
+
+
+# ---------------------------------------------------------------------------
+# round-trip and format
+# ---------------------------------------------------------------------------
+
+
+def test_roundtrip_preserves_structure_and_values(tmp_path):
+    tree = {"a": np.arange(4.0), "b": (np.ones(2), [np.zeros(1)]),
+            "c": np.asarray(7)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    got = load_checkpoint(str(tmp_path), 1)
+    assert isinstance(got["b"], tuple) and isinstance(got["b"][1], list)
+    assert np.array_equal(got["a"], tree["a"])
+    assert np.array_equal(got["b"][0], tree["b"][0])
+    assert int(got["c"]) == 7
+
+
+def test_save_is_atomic_no_tmp_left_behind(tmp_path):
+    p = save_checkpoint(str(tmp_path), 3, _tree(3))
+    assert os.path.exists(p)
+    assert [f for f in os.listdir(tmp_path) if f.endswith(".tmp")] == []
+    assert verify_checkpoint(p)
+
+
+# ---------------------------------------------------------------------------
+# corruption detection (all modes -> CheckpointCorruptError)
+# ---------------------------------------------------------------------------
+
+
+def test_truncated_npz_is_typed_corruption(tmp_path):
+    p = save_checkpoint(str(tmp_path), 1, _tree(1))
+    data = open(p, "rb").read()
+    open(p, "wb").write(data[: len(data) // 2])
+    with pytest.raises(CheckpointCorruptError, match="unreadable"):
+        load_checkpoint(str(tmp_path), 1)
+    assert not verify_checkpoint(p)
+
+
+def test_not_a_zip_is_typed_corruption(tmp_path):
+    p = _path(tmp_path, 2)
+    open(p, "wb").write(b"this is not an npz at all")
+    with pytest.raises(CheckpointCorruptError):
+        load_checkpoint(str(tmp_path), 2)
+
+
+def test_missing_manifest_is_typed_corruption(tmp_path):
+    p = _path(tmp_path, 1)
+    np.savez(open(p, "wb"), w=np.ones(3))   # npz without __manifest__
+    with pytest.raises(CheckpointCorruptError, match="__manifest__"):
+        load_checkpoint(str(tmp_path), 1)
+
+
+def test_flipped_leaf_bytes_fail_checksum(tmp_path):
+    """Rewrite the npz with one leaf's data changed but the original
+    manifest: structurally valid, semantically corrupt — only the crc
+    catches it."""
+    p = save_checkpoint(str(tmp_path), 1, _tree(1))
+    with np.load(p) as data:
+        flat = {k: data[k] for k in data.files if k != "__manifest__"}
+        manifest = bytes(data["__manifest__"])
+    key = sorted(k for k in flat if k != "step")[0]
+    flat[key] = flat[key] + 1.0   # silent bit-flip stand-in
+    with open(p, "wb") as f:
+        np.savez(f, __manifest__=np.frombuffer(manifest, dtype=np.uint8),
+                 **flat)
+    with pytest.raises(CheckpointCorruptError, match="checksum mismatch"):
+        load_checkpoint(str(tmp_path), 1)
+
+
+def test_missing_leaf_vs_manifest_detected(tmp_path):
+    p = save_checkpoint(str(tmp_path), 1, _tree(1))
+    with np.load(p) as data:
+        flat = {k: data[k] for k in data.files if k != "__manifest__"}
+        manifest = bytes(data["__manifest__"])
+    flat.pop(sorted(flat)[0])
+    with open(p, "wb") as f:
+        np.savez(f, __manifest__=np.frombuffer(manifest, dtype=np.uint8),
+                 **flat)
+    with pytest.raises(CheckpointCorruptError, match="missing"):
+        load_checkpoint(str(tmp_path), 1)
+
+
+def test_pre_hardening_bare_spec_manifest_still_loads(tmp_path):
+    """Checkpoints written before the checksum format (manifest = bare
+    spec) load without verification rather than erroring."""
+    tree = {"w": np.arange(3.0)}
+    spec = {"__kind__": "dict",
+            "items": {"w": {"__kind__": "leaf"}}}
+    p = _path(tmp_path, 9)
+    with open(p, "wb") as f:
+        np.savez(f, __manifest__=np.frombuffer(
+            json.dumps(spec).encode(), dtype=np.uint8), w=tree["w"])
+    got = load_checkpoint(str(tmp_path), 9)
+    assert np.array_equal(got["w"], tree["w"])
+
+
+# ---------------------------------------------------------------------------
+# newest-valid fallback
+# ---------------------------------------------------------------------------
+
+
+def test_load_falls_back_to_previous_valid_step(tmp_path):
+    for s in (1, 2, 3):
+        save_checkpoint(str(tmp_path), s, _tree(s))
+    p3 = _path(tmp_path, 3)
+    open(p3, "wb").write(b"garbage")
+    got = load_checkpoint(str(tmp_path))     # step=None: newest valid
+    assert int(got["step"]) == 2
+    # explicit step still raises
+    with pytest.raises(CheckpointCorruptError):
+        load_checkpoint(str(tmp_path), 3)
+
+
+def test_latest_step_skips_corrupt_files(tmp_path):
+    for s in (1, 2):
+        save_checkpoint(str(tmp_path), s, _tree(s))
+    open(_path(tmp_path, 2), "wb").write(b"junk")
+    assert latest_step(str(tmp_path)) == 1
+    assert latest_step(str(tmp_path), validate=False) == 2   # name scan
+    open(_path(tmp_path, 1), "wb").write(b"junk")
+    assert latest_step(str(tmp_path)) is None
+
+
+def test_all_corrupt_raises_with_context(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree(1))
+    open(_path(tmp_path, 1), "wb").write(b"junk")
+    with pytest.raises(CheckpointCorruptError, match="all corrupt"):
+        load_checkpoint(str(tmp_path))
+
+
+def test_empty_directory_raises_file_not_found(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(str(tmp_path))
+    assert latest_step(str(tmp_path)) is None
+    assert checkpoint_steps(str(tmp_path)) == []
+
+
+# ---------------------------------------------------------------------------
+# tmp cleanup and retention
+# ---------------------------------------------------------------------------
+
+
+def test_stale_tmp_cleaned_on_next_save_and_never_loaded(tmp_path):
+    stale = os.path.join(str(tmp_path), "step_00000007.npz.tmp")
+    open(stale, "wb").write(b"half-written crash debris")
+    save_checkpoint(str(tmp_path), 8, _tree(8))
+    assert not os.path.exists(stale)
+    # the stale tmp never shadowed a real step
+    assert checkpoint_steps(str(tmp_path)) == [8]
+
+
+def test_retention_keeps_newest_k(tmp_path):
+    for s in range(1, 6):
+        save_checkpoint(str(tmp_path), s, _tree(s), keep=3)
+    assert checkpoint_steps(str(tmp_path)) == [3, 4, 5]
+    assert int(load_checkpoint(str(tmp_path))["step"]) == 5
+
+
+def test_keep_zero_retains_everything(tmp_path):
+    for s in range(1, 4):
+        save_checkpoint(str(tmp_path), s, _tree(s), keep=0)
+    assert checkpoint_steps(str(tmp_path)) == [1, 2, 3]
+
+
+def test_leaf_crc_matches_manifest(tmp_path):
+    p = save_checkpoint(str(tmp_path), 1, _tree(1))
+    with np.load(p) as data:
+        manifest = json.loads(bytes(data["__manifest__"]).decode())
+        for k, want in manifest["checksums"].items():
+            got = zlib.crc32(
+                np.ascontiguousarray(data[k]).tobytes()) & 0xFFFFFFFF
+            assert got == int(want)
+
+
+# ---------------------------------------------------------------------------
+# Trainer.restore integration: corrupted latest -> previous valid step
+# ---------------------------------------------------------------------------
+
+
+def test_trainer_restore_falls_back_to_previous_valid(tmp_path):
+    from repro.config import GNNConfig
+    from repro.core.engine import HybridParallelEngine
+    from repro.core.partition import build_partitions
+    from repro.core.strategies import strategy_views
+    from repro.core.trainer import Trainer
+    from repro.graph import sbm_graph
+    from repro.models import make_gnn
+    from repro.optim import adam
+
+    g = sbm_graph(num_nodes=120, num_classes=4, feature_dim=8,
+                  p_in=0.05, p_out=0.005, seed=0).add_self_loops()
+    cfg = GNNConfig(model="gcn", num_layers=2, hidden_dim=16,
+                    num_classes=4, feature_dim=8)
+
+    def make():
+        engine = HybridParallelEngine(make_gnn(cfg),
+                                      build_partitions(g, 1))
+        return Trainer(engine, adam(1e-2), seed=0)
+
+    tr = make()
+    tr.fit(strategy_views(g, "mini", K=2, seed=0, batch_nodes=24),
+           steps=4, checkpoint_dir=str(tmp_path), checkpoint_every=2)
+    assert checkpoint_steps(str(tmp_path)) == [2, 4]
+    p4 = _path(tmp_path, 4)
+    open(p4, "wb").write(open(p4, "rb").read()[:100])   # truncate
+
+    tr2 = make()
+    assert tr2.restore(str(tmp_path)) == 2   # fell back past step 4
+    assert tr2.step_num == 2

@@ -1,0 +1,447 @@
+"""Fault-tolerant runtime (PR 8): chaos contract and recovery semantics.
+
+The load-bearing invariant: every supervised unit (view build, device
+staging, step dispatch, checkpoint save) is a pure function of its
+inputs, so a run with injected faults — killed prefetch workers, failed
+builds, failed saves — must produce a loss trajectory **bit-identical**
+to the fault-free run, for both trainers and both aggregate backends,
+without breaking the compiled-once / compiled-per-bucket contracts.
+
+Divergence recovery (skip_view / rollback) changes the trajectory by
+design; those tests check the recovery semantics instead: the poison
+update is discarded, rollback restores the newest *valid* checkpoint
+(walking past a corrupted latest file), the stream cursor moves past
+the poison view, and training completes without a retrace.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.config import GNNConfig
+from repro.core.engine import HybridParallelEngine
+from repro.core.partition import build_partitions
+from repro.core.strategies import shard_view, strategy_views
+from repro.core.trainer import CompactTrainer, Trainer
+from repro.graph import sbm_graph
+from repro.models import make_gnn
+from repro.optim import adam
+from repro.runtime import (DivergenceError, FaultInjector, FaultPolicy,
+                           FaultRetriesExceeded, InjectedFault,
+                           PrefetchShutdownError, Retrier,
+                           StepTimeoutError, StreamPrefetcher,
+                           TransientError, ViewPrefetcher, WorkerKilled,
+                           sync_with_timeout)
+
+# no real sleeping in tests
+FAST = dict(backoff_base=0.0, backoff_cap=0.0, jitter=0.0)
+
+# the chaos plan of the acceptance contract: a killed worker, failed
+# view builds, a failed device staging, a failed checkpoint save
+CHAOS_PLAN = {
+    "worker_kill": {1},
+    "view_build": {0, 2},
+    "device_put": {0},
+    "checkpoint_save": {0},
+}
+
+
+def _graph(n=160, seed=0):
+    return sbm_graph(num_nodes=n, num_classes=4, feature_dim=8,
+                     p_in=0.05, p_out=0.005, seed=seed).add_self_loops()
+
+
+@pytest.fixture(scope="module")
+def g():
+    return _graph()
+
+
+def _engine_trainer(g, **kw):
+    cfg = GNNConfig(model="gcn", num_layers=2, hidden_dim=16,
+                    num_classes=4, feature_dim=8)
+    engine = HybridParallelEngine(make_gnn(cfg), build_partitions(g, 1))
+    return Trainer(engine, adam(1e-2), seed=0, **kw)
+
+
+def _compact_trainer(g, backend="reference", **kw):
+    cfg = GNNConfig(model="gcn", num_layers=2, hidden_dim=16,
+                    num_classes=4, feature_dim=8,
+                    aggregate_backend=backend)
+    return CompactTrainer(make_gnn(cfg), g, adam(1e-2), seed=0, **kw)
+
+
+def _views(g, compact=False, seed=0):
+    return strategy_views(g, "mini", K=2, seed=seed, batch_nodes=24,
+                          compact=compact)
+
+
+# ---------------------------------------------------------------------------
+# policy / injector / retrier units
+# ---------------------------------------------------------------------------
+
+
+def test_policy_backoff_deterministic_capped():
+    p = FaultPolicy(backoff_base=0.1, backoff_factor=2.0, backoff_cap=0.3,
+                    jitter=0.1, seed=7)
+    d = [p.delay("s", a) for a in range(6)]
+    assert d == [p.delay("s", a) for a in range(6)]     # deterministic
+    assert all(x <= 0.3 * 1.1 + 1e-9 for x in d)        # capped (+jitter)
+    assert d[1] > d[0] * 0.8                            # roughly growing
+
+
+def test_policy_validates_divergence_action():
+    with pytest.raises(ValueError, match="on_divergence"):
+        FaultPolicy(on_divergence="explode")
+
+
+def test_injector_unknown_point_rejected():
+    with pytest.raises(ValueError, match="unknown injection point"):
+        FaultInjector({"bogus": {0}})
+
+
+def test_injector_occurrences_and_keys_deterministic():
+    inj = FaultInjector({"view_build": {1, 3}}, seed=0)
+    fired = [inj.fires("view_build") for _ in range(5)]
+    assert fired == [False, True, False, True, False]
+    inj2 = FaultInjector({"view_build": {1, 3}}, seed=0)
+    # keyed decisions ignore call order entirely
+    assert [inj2.fires("view_build", key=k) for k in (3, 0, 1)] \
+        == [True, False, True]
+    assert sorted(inj2.fired["view_build"]) == [1, 3]
+
+
+def test_injector_rate_mode_pure_function_of_seed():
+    a = FaultInjector({"step": 0.5}, seed=1)
+    b = FaultInjector({"step": 0.5}, seed=1)
+    assert [a.fires("step") for _ in range(64)] \
+        == [b.fires("step") for _ in range(64)]
+    assert 0 < a.total_fired() < 64
+
+
+def test_retrier_retries_transients_then_succeeds():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise TransientError("flake")
+        return "ok"
+
+    rt = Retrier(FaultPolicy(max_retries=3, **FAST))
+    assert rt("stage", flaky) == "ok"
+    assert len(calls) == 3
+    assert [e["stage"] for e in rt.events] == ["stage", "stage"]
+
+
+def test_retrier_exhaustion_raises_typed_error():
+    rt = Retrier(FaultPolicy(max_retries=2, **FAST))
+
+    def always():
+        raise TransientError("nope")
+
+    with pytest.raises(FaultRetriesExceeded, match="3 consecutive"):
+        rt("stage", always)
+
+
+def test_retrier_does_not_retry_programming_errors():
+    rt = Retrier(FaultPolicy(max_retries=3, **FAST))
+    calls = []
+
+    def broken():
+        calls.append(1)
+        raise KeyError("bug")
+
+    with pytest.raises(KeyError):
+        rt("stage", broken)
+    assert len(calls) == 1
+
+
+def test_retrier_keyed_injection_fires_once():
+    inj = FaultInjector({"view_build": {5}})
+    rt = Retrier(FaultPolicy(max_retries=2, **FAST), inj)
+    # the keyed occurrence fails on attempt 0 and is retried clean
+    assert rt("view_build", lambda: "v5", key=5) == "v5"
+    assert inj.fired["view_build"] == [5]
+    # with no retry budget the injected fault exhausts the stage
+    with pytest.raises(FaultRetriesExceeded) as ei:
+        Retrier(FaultPolicy(max_retries=0, **FAST),
+                FaultInjector({"view_build": {5}}))(
+            "view_build", lambda: "v5", key=5)
+    assert isinstance(ei.value.__cause__, InjectedFault)
+
+
+def test_sync_with_timeout_passthrough_and_timeout():
+    assert sync_with_timeout(lambda: 3.5, None) == 3.5
+    assert sync_with_timeout(lambda: 3.5, 5.0) == 3.5
+    with pytest.raises(StepTimeoutError):
+        sync_with_timeout(lambda: time.sleep(10) or 0.0, 0.05)
+    with pytest.raises(RuntimeError, match="boom"):
+        sync_with_timeout(lambda: (_ for _ in ()).throw(
+            RuntimeError("boom")), 5.0)
+
+
+# ---------------------------------------------------------------------------
+# supervised prefetchers
+# ---------------------------------------------------------------------------
+
+
+def test_view_prefetcher_close_joins_thread():
+    pf = ViewPrefetcher(iter(range(100)), lambda v: v, depth=2)
+    assert next(pf) == 0
+    pf.close()
+    assert not pf._thread.is_alive()
+
+
+def test_view_prefetcher_close_raises_on_stuck_thread():
+    release = threading.Event()
+
+    def prepare(v):
+        if v == 1:
+            release.wait(30)   # non-cancellable blocking user code
+        return v
+
+    pf = ViewPrefetcher(iter(range(10)), prepare, depth=1)
+    assert next(pf) == 0
+    with pytest.raises(PrefetchShutdownError, match="still alive"):
+        pf.close(timeout=0.3)
+    release.set()              # let the daemon die for real
+
+
+def test_stream_prefetcher_worker_kill_respawns_and_preserves_order(g):
+    stream = _views(g)
+    inj = FaultInjector({"worker_kill": {1, 3}})
+    rt = Retrier(FaultPolicy(max_retries=2, **FAST), inj)
+    # prepare detaches (ring-buffer views must be consumed immediately)
+    pf = StreamPrefetcher(stream, lambda v: np.array(v.loss_mask),
+                          steps=8, workers=3, runtime=rt)
+    got = list(pf)
+    pf.close()
+    ref = [np.array(_views(g).build(i).loss_mask) for i in range(8)]
+    assert len(got) == 8
+    for i, (a, b) in enumerate(zip(got, ref)):
+        assert np.array_equal(a, b), f"view {i} not bit-identical"
+    assert sorted(inj.fired["worker_kill"]) == [1, 3]
+    assert all(not t.is_alive() for t in pf._threads)
+
+
+def test_stream_prefetcher_respawn_cap_aborts(g):
+    stream = _views(g)
+    # every index kills its worker; cap of 2 respawns must abort the pool
+    inj = FaultInjector({"worker_kill": 0.999})
+    rt = Retrier(FaultPolicy(max_worker_respawns=2, **FAST), inj)
+    pf = StreamPrefetcher(stream, lambda v: v, steps=8, workers=2,
+                          runtime=rt)
+    with pytest.raises(RuntimeError, match="max_worker_respawns"):
+        list(pf)
+    pf.close()
+
+
+def test_stream_prefetcher_hang_reassigned_by_watchdog(g):
+    stream = _views(g)
+    inj = FaultInjector({"view_hang": {2}}, hang_seconds=10.0)
+    rt = Retrier(FaultPolicy(timeouts={"view_build": 0.2}, **FAST), inj)
+    pf = StreamPrefetcher(stream, lambda v: np.array(v.loss_mask),
+                          steps=6, workers=2, runtime=rt)
+    got = list(pf)
+    assert len(got) == 6           # the hung index was rebuilt elsewhere
+    assert inj.fired["view_hang"] == [2]
+    pf.close()                     # wakes the hung waiter via the event
+
+
+def test_stream_prefetcher_close_verifies_exit(g):
+    pf = StreamPrefetcher(_views(g), lambda v: v, steps=64, workers=4)
+    next(pf)
+    pf.close()
+    assert all(not t.is_alive() for t in pf._threads)
+
+
+# ---------------------------------------------------------------------------
+# the chaos contract: injected faults, bit-identical trajectory
+# ---------------------------------------------------------------------------
+
+
+def _chaos_run(make, make_views, tmp_path, steps=8, **fit_kw):
+    base = make()
+    ref = base.fit(make_views(), **fit_kw, steps=steps)["losses"]
+    inj = FaultInjector(CHAOS_PLAN, seed=0)
+    tr = make(fault_policy=FaultPolicy(**FAST), injector=inj)
+    got = tr.fit(make_views(), **fit_kw, steps=steps,
+                 checkpoint_dir=str(tmp_path),
+                 checkpoint_every=3)["losses"]
+    assert inj.total_fired() >= 3, inj.fired
+    assert "worker_kill" in inj.fired
+    assert "view_build" in inj.fired
+    assert "checkpoint_save" in inj.fired
+    assert list(map(float, got)) == list(map(float, ref))
+    return tr
+
+
+def test_chaos_trajectory_invariance_engine_trainer(g, tmp_path):
+    def make(**kw):
+        return _engine_trainer(g, **kw)
+
+    tr = _chaos_run(make, lambda: _views(g), tmp_path,
+                    prefetch_workers=3)
+    tr.assert_compiled_once()
+
+
+@pytest.mark.parametrize("backend", ["reference", "csc"])
+def test_chaos_trajectory_invariance_compact_trainer(g, tmp_path, backend):
+    def make(**kw):
+        return _compact_trainer(g, backend=backend, **kw)
+
+    tr = _chaos_run(make, lambda: _views(g, compact=True), tmp_path,
+                    prefetch_workers=3)
+    tr.assert_compiled_per_bucket()
+
+
+def test_chaos_invariance_without_prefetch(g, tmp_path):
+    """The inline (no-prefetch) path retries view builds too."""
+    base = _engine_trainer(g)
+    ref = base.fit(_views(g), steps=6, prefetch=False)["losses"]
+    inj = FaultInjector({"view_build": {1, 4}, "device_put": {0}})
+    tr = _engine_trainer(g, fault_policy=FaultPolicy(**FAST), injector=inj)
+    got = tr.fit(_views(g), steps=6, prefetch=False)["losses"]
+    assert inj.total_fired() >= 2
+    assert list(map(float, got)) == list(map(float, ref))
+    tr.assert_compiled_once()
+
+
+# ---------------------------------------------------------------------------
+# divergence recovery
+# ---------------------------------------------------------------------------
+
+
+def test_divergence_raise_restores_prestep_state(g):
+    inj = FaultInjector({"diverge": {2}})
+    tr = _engine_trainer(
+        g, fault_policy=FaultPolicy(check_finite=True, **FAST),
+        injector=inj)
+    with pytest.raises(DivergenceError, match="non-finite"):
+        tr.fit(_views(g), steps=6)
+    assert tr.step_num == 2        # the poison update was discarded
+
+
+def test_divergence_skip_view_completes_and_logs_event(g):
+    inj = FaultInjector({"diverge": {2}})
+    tr = _engine_trainer(
+        g, fault_policy=FaultPolicy(on_divergence="skip_view", **FAST),
+        injector=inj)
+    out = tr.fit(_views(g), steps=6)
+    assert tr.step_num == 5        # 6 views, one poisoned and skipped
+    assert all(np.isfinite(out["losses"]))
+    ev = [e for e in out["events"] if e.get("stage") == "diverge"]
+    assert len(ev) == 1 and ev[0]["action"] == "skip_view"
+    tr.assert_compiled_once()
+
+
+@pytest.mark.parametrize("kind", ["engine", "compact"])
+def test_divergence_rollback_restores_checkpoint_and_skips_view(
+        g, tmp_path, kind):
+    """Rollback e2e: non-finite loss -> restore last valid checkpoint,
+    continue past the poison view via the stream cursor, complete."""
+    make = _engine_trainer if kind == "engine" else _compact_trainer
+    inj = FaultInjector({"diverge": {4}})
+    tr = make(g, fault_policy=FaultPolicy(on_divergence="rollback",
+                                          **FAST), injector=inj)
+    out = tr.fit(_views(g, compact=(kind == "compact")), steps=8,
+                 checkpoint_dir=str(tmp_path), checkpoint_every=2)
+    ev = [e for e in out["events"] if e.get("stage") == "diverge"]
+    assert len(ev) == 1 and ev[0]["action"] == "rollback"
+    assert all(np.isfinite(out["losses"]))
+    # rolled back to the step-4 checkpoint, then trained the remaining
+    # 3 views (the poison view is never replayed)
+    assert tr.step_num == 7
+    if kind == "engine":
+        tr.assert_compiled_once()
+    else:
+        tr.assert_compiled_per_bucket()
+
+
+def test_divergence_rollback_without_checkpoint_raises(g):
+    inj = FaultInjector({"diverge": {1}})
+    tr = _engine_trainer(
+        g, fault_policy=FaultPolicy(on_divergence="rollback", **FAST),
+        injector=inj)
+    with pytest.raises(DivergenceError, match="no valid checkpoint"):
+        tr.fit(_views(g), steps=4)
+
+
+def test_rollback_walks_past_corrupted_latest_checkpoint(g, tmp_path):
+    """Corrupt the newest checkpoint: rollback's restore must detect it
+    by checksum and fall back to the previous valid step."""
+    from repro.checkpoint import checkpoint_steps
+    # seed the directory: checkpoints at steps 2 and 4
+    seeder = _engine_trainer(g, fault_policy=FaultPolicy(**FAST))
+    seeder.fit(_views(g), steps=5, checkpoint_dir=str(tmp_path),
+               checkpoint_every=2)
+    steps = checkpoint_steps(str(tmp_path))
+    assert steps == [2, 4]
+    newest = tmp_path / f"step_{steps[-1]:08d}.npz"
+    newest.write_bytes(newest.read_bytes()[:-40])   # truncate -> corrupt
+
+    inj = FaultInjector({"diverge": {1}})
+    tr = _engine_trainer(
+        g, fault_policy=FaultPolicy(on_divergence="rollback", **FAST),
+        injector=inj)
+    out = tr.fit(_views(g), steps=4, checkpoint_dir=str(tmp_path))
+    ev = [e for e in out["events"] if e.get("stage") == "diverge"]
+    assert len(ev) == 1
+    # poison at view idx 1 (step 2): rollback restores the newest VALID
+    # checkpoint — step 2, because step 4's file fails its checksum —
+    # then trains the remaining 2 views: 2 + 2 = 4 (a step-4 restore
+    # would have ended at 6)
+    assert tr.step_num == 4
+    assert all(np.isfinite(out["losses"]))
+
+
+def test_resume_true_restores_newest_valid_and_fast_forwards(g, tmp_path):
+    stream = _views(g)
+    tr = _engine_trainer(g, fault_policy=FaultPolicy(**FAST))
+    tr.fit(stream, steps=6, checkpoint_dir=str(tmp_path),
+           checkpoint_every=3)
+    assert tr.view_cursor == 6
+
+    tr2 = _engine_trainer(g, fault_policy=FaultPolicy(**FAST))
+    stream2 = _views(g)
+    out = tr2.fit(stream2, steps=2, checkpoint_dir=str(tmp_path),
+                  resume=True)
+    # resumed from step 6's checkpoint, stream fast-forwarded to view 6
+    assert tr2.step_num == 8
+    assert stream2.cursor == 8
+    assert len(out["losses"]) == 2
+
+
+def test_resume_with_empty_dir_is_fresh_start(g, tmp_path):
+    tr = _engine_trainer(g, fault_policy=FaultPolicy(**FAST))
+    out = tr.fit(_views(g), steps=3, checkpoint_dir=str(tmp_path),
+                 resume=True)
+    assert tr.step_num == 3 and len(out["losses"]) == 3
+
+
+# ---------------------------------------------------------------------------
+# step watchdog
+# ---------------------------------------------------------------------------
+
+
+def test_step_timeout_policy_fires_on_hung_pull(g):
+    """A step timeout arms the watchdog around the loss sync; a fast
+    normal fit passes untouched."""
+    tr = _engine_trainer(
+        g, fault_policy=FaultPolicy(timeouts={"step": 30.0}, **FAST))
+    out = tr.fit(_views(g), steps=3)
+    assert len(out["losses"]) == 3
+    tr.assert_compiled_once()
+
+
+# ---------------------------------------------------------------------------
+# production path stays zero-overhead
+# ---------------------------------------------------------------------------
+
+
+def test_no_policy_means_no_runtime(g):
+    tr = _engine_trainer(g)
+    assert tr.runtime is None
+    out = tr.fit(_views(g), steps=3)
+    assert out["events"] == []

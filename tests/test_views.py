@@ -9,6 +9,8 @@ parity through both aggregate backends.
 
 The hypothesis sweep lives in test_strategies_properties.py (dev extra).
 """
+import warnings
+
 import numpy as np
 import pytest
 
@@ -432,10 +434,21 @@ def test_compact_block_builder_ring_reuse_and_overflow():
     assert len(ids) <= 2 * len(shapes)
     assert set(bb._rings) == shapes
     assert bb.stages == 6
-    # a spec too small for the view fails loudly at stage time
+    # a spec too small for the view degrades gracefully: escalate to a
+    # covering power-of-two shape (capped at graph capacity), warn once,
+    # count the overflow — a long run is never killed by one big cluster
     tiny = CompactBlockBuilder(g, 2, buckets=BucketSpec(((2, 2),)))
-    with pytest.raises(ValueError, match="overflows"):
-        tiny.stage(comp.build(0))
+    cv = comp.build(0)
+    with pytest.warns(RuntimeWarning, match="overflows every bucket"):
+        blk = tiny.stage(cv)
+    assert blk.x.shape[0] >= cv.num_nodes
+    assert blk.src.shape[0] >= cv.num_edges
+    assert blk.x.shape[0] <= g.num_nodes
+    assert tiny.overflows == 1
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")   # the warning fires only once
+        tiny.stage(comp.build(1))
+    assert tiny.overflows == 2
 
 
 def test_compact_block_fill_matches_to_dense_block():
