@@ -19,7 +19,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import gnn_tables, gnn_scaling, kernels_bench, \
-        roofline_table, strategies_bench
+        roofline_table, serving_bench, strategies_bench
 
     steps = 30 if args.fast else 60
     benches = {
@@ -36,6 +36,7 @@ def main(argv=None) -> int:
         "kernels": kernels_bench.kernels,
         "aggregate": lambda: kernels_bench.aggregate(smoke=args.smoke),
         "strategies": lambda: strategies_bench.strategies(smoke=args.smoke),
+        "serving": lambda: serving_bench.serving(smoke=args.smoke),
         "roofline": roofline_table.roofline_table,
     }
     only = set(args.only.split(",")) if args.only else None

@@ -1,0 +1,162 @@
+"""Online GNN serving benchmark (PR 9 tentpole): latency/QPS for the
+request-batched :class:`repro.serving.GNNServer` across batch size x
+historical-embedding cache on/off x bucket ladder.
+
+Each cell replays the same seeded skewed request trace (hot nodes
+dominate — the regime a historical cache exists for) through the
+synchronous ``submit`` inner loop: one warm pass (compiles the bucketed
+steps and fills the cache), then a measured steady-state pass reporting
+per-request p50/p99 latency, sustained QPS, per-stage time split and
+cache hit rate. The compiled-once-per-bucket contract is asserted on
+every cell.
+
+Writes ``BENCH_serving.json``; the headline key is
+``cache_beats_nocache_p50`` — the cache-hit fast path (1-hop view + top
+layer only) must beat the full K-hop recompute at the median.
+
+``--smoke`` is the CI lane: tiny trace, one batch size, plus hard
+asserts — bit-exact cache-on vs cache-off parity at staleness 0 and the
+per-bucket trace certificate.
+
+    PYTHONPATH=src python -m benchmarks.serving_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _measure(server, trace: np.ndarray, batch: int) -> dict:
+    """Replay ``trace`` in ``batch``-sized submits; steady-state stats."""
+    from repro.serving.server import ServeStats
+    chunks = [trace[i:i + batch] for i in range(0, len(trace), batch)]
+    for c in chunks:                      # warm pass: compile + fill cache
+        server.submit(c)
+    server.stats = ServeStats()           # measure steady state only
+    t0 = time.perf_counter()
+    for c in chunks:
+        server.submit(c)
+    wall = time.perf_counter() - t0
+    server.assert_compiled_per_bucket()
+    s = server.server_stats()
+    lat = s["latency_ms"]
+    return {
+        "p50_ms": round(lat["p50"], 3), "p99_ms": round(lat["p99"], 3),
+        "mean_ms": round(lat["mean"], 3),
+        "qps": round(len(trace) / wall, 1),
+        "wall_s": round(wall, 4),
+        "stage_s": {k: round(v, 4) for k, v in s["stage_s"].items()},
+        "hit_rate": round(s["cache"].get("hit_rate", 0.0), 3),
+        "buckets": {"full": s["trace"]["full"]["buckets"],
+                    "hit": s["trace"]["hit"]["buckets"]},
+    }
+
+
+def serving(smoke: bool = False, out_json: str = "BENCH_serving.json",
+            requests: int = 0) -> dict:
+    import repro.api as api
+    from repro.core.views import BucketSpec
+    from repro.launch.serve_gnn import request_trace
+
+    if smoke and out_json == "BENCH_serving.json":
+        out_json = "BENCH_serving_smoke.json"   # don't clobber nightly
+    steps = 10 if smoke else 60
+    n_req = requests or (64 if smoke else 1024)
+    result = api.train(api.TrainJob(dataset="cora", steps=steps,
+                                    hidden=32 if smoke else 64,
+                                    eval_every=max(1, steps - 1)))
+    g = result.graph
+    trace = request_trace(g, n_req, seed=0)
+
+    batch_sizes = (8,) if smoke else (1, 8, 32)
+    ladders = {"ladder": None}
+    if not smoke:
+        # single max-size bucket: every view pads to graph capacity —
+        # the "no ladder" ablation the size-bucketed menu is against
+        big = BucketSpec.for_graph(g, levels=1)
+        ladders["one_bucket"] = big
+
+    cells = []
+    for ladder_name, buckets in ladders.items():
+        for batch in batch_sizes:
+            for cache in (True, False):
+                srv = api.serve(result, api.ServeConfig(
+                    max_batch=batch, cache=cache, buckets=buckets))
+                m = _measure(srv, trace, batch)
+                cell = {"ladder": ladder_name, "max_batch": batch,
+                        "cache": cache, **m}
+                cells.append(cell)
+                emit(f"serving/{ladder_name}/b{batch}/"
+                     f"{'cache' if cache else 'nocache'}",
+                     m["mean_ms"] * 1e3,
+                     f"p50={m['p50_ms']}ms p99={m['p99_ms']}ms "
+                     f"qps={m['qps']} hit={m['hit_rate']}")
+
+    # headline: at the default ladder and mid batch size, the cache-hit
+    # fast path must beat the full K-hop recompute at the median
+    ref_batch = batch_sizes[min(1, len(batch_sizes) - 1)]
+    ref = {(c["cache"]): c for c in cells
+           if c["ladder"] == "ladder" and c["max_batch"] == ref_batch}
+    beats = ref[True]["p50_ms"] < ref[False]["p50_ms"]
+
+    if smoke:
+        # hard contracts: staleness-0 parity, bit-exact, plus the
+        # per-bucket certificate (already asserted per cell above)
+        rng = np.random.default_rng(1)
+        targets = rng.choice(g.num_nodes, 16, replace=False)
+        cached = api.serve(result, api.ServeConfig(max_batch=16))
+        plain = api.serve(result, api.ServeConfig(max_batch=16,
+                                                  cache=False))
+        cached.submit(targets)            # warm: all misses
+        hit = cached.submit(targets)      # covered targets now hit
+        if cached.cache.stats()["hits"] == 0:
+            raise AssertionError("smoke trace produced no cache hits")
+        if not np.array_equal(hit, plain.submit(targets)):
+            raise AssertionError("cache-hit logits != full recompute")
+        cached.assert_compiled_per_bucket()
+        plain.assert_compiled_per_bucket()
+        emit("serving/smoke_contracts", 0.0,
+             "bit-exact cache parity + compiled-once-per-bucket")
+
+    payload = {
+        "model": {"dataset": "cora", "layers": result.model.K,
+                  "hidden": 32 if smoke else 64, "final_acc":
+                  round(float(result.final_acc), 4)},
+        "trace": {"requests": n_req, "seed": 0, "skew": "10% hot / 80%"},
+        "cells": cells,
+        "cache_beats_nocache_p50": bool(beats),
+        "cache_p50_speedup": round(
+            ref[False]["p50_ms"] / max(ref[True]["p50_ms"], 1e-9), 3),
+        "note": ("steady-state pass after a warm pass (compiles + cache "
+                 "fill); per-request latency from the synchronous submit "
+                 "loop; CPU wall-clock"),
+    }
+    if not smoke and not beats:
+        raise AssertionError(
+            f"historical-embedding cache lost at the median: "
+            f"{ref[True]['p50_ms']}ms vs {ref[False]['p50_ms']}ms")
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out_json}", flush=True)
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny trace, parity + trace contracts")
+    ap.add_argument("--requests", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args(argv)
+    serving(smoke=args.smoke, out_json=args.out, requests=args.requests)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

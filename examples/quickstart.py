@@ -42,19 +42,18 @@ def main(backend: str = "reference"):
                          mask=g.test_mask.astype("float32"))
     print(f"test accuracy: {float(acc):.4f}")
 
-    # ... or the 5-line Trainer path: same model, compiled-once step,
-    # prefetch pipeline, eval through the (1-worker) distributed engine
-    from repro.core.engine import HybridParallelEngine
-    from repro.core.partition import build_partitions
-    from repro.core.strategies import strategy_views
-    from repro.core.trainer import Trainer
+    # ... or the facade: one typed job, the right trainer picked for
+    # you (compiled-once, trace contract certified), then chain straight
+    # into offline inference and online serving
+    import repro.api as api
 
-    trainer = Trainer(HybridParallelEngine(
-        model, build_partitions(g, 1)), adam(1e-2, weight_decay=5e-4))
-    trainer.fit(strategy_views(g, "global", cfg.num_layers), steps=100,
-                eval_every=100, eval_view=global_batch_view(
-                    g, cfg.num_layers), log_every=1)
-    trainer.assert_compiled_once()
+    result = api.train(api.TrainJob(dataset="cora", steps=100, hidden=32,
+                                    eval_every=100))
+    print(f"facade test accuracy: {result.final_acc:.4f}")
+    server = api.serve(result, api.ServeConfig(max_batch=8))
+    preds = server.submit([0, 1, 2, 3]).argmax(-1)
+    print(f"online predictions for nodes 0..3: {preds}")
+    server.assert_compiled_per_bucket()
 
 
 if __name__ == "__main__":

@@ -203,6 +203,41 @@ def check_compact_buckets(report: Report, full: bool = False) -> None:
                     vmem_budget=report.budget), ids=COMPACT_RULES)
 
 
+def check_serving(report: Report, full: bool = False) -> None:
+    """GNNServer infer paths: the full K-hop step and the cache-hit
+    1-hop step obey the same O(view) aval contract as compact training
+    (a serving step must never close over full-graph tensors)."""
+    import jax
+    from repro.config import GNNConfig
+    from repro.models import make_gnn
+    from repro.serving import GNNServer
+
+    g = _graph()
+    N, E = g.num_nodes, g.num_edges
+    backends = BACKENDS if full else ("csc",)
+    targets = np.arange(0, 24, 2)
+    for backend in backends:
+        cfg = GNNConfig(model="gcn", num_layers=2, hidden_dim=16,
+                        num_classes=4, feature_dim=8,
+                        aggregate_backend=backend)
+        model = make_gnn(cfg)
+        server = GNNServer(model, model.init(jax.random.PRNGKey(0), 8), g)
+        for name, step, builder, stager in (
+                ("full", server._full_step, server._builder,
+                 server._stager),
+                ("hit", server._hit_step, server._hit_builder,
+                 server._hit_stager)):
+            view = builder.khop_compact(targets)
+            block = jax.tree_util.tree_map(np.array, stager.stage(view))
+            jx = step.jaxpr(server.params, block)
+            pads = (int(block.x.shape[0]), int(block.src.shape[0]))
+            exempt = tuple(d for d in pads if d in (N, E))
+            report.run(JaxprContext(
+                jx, label=f"serving:{backend}/{name}",
+                graph_shape=(N, E), exempt_dims=exempt,
+                vmem_budget=report.budget), ids=COMPACT_RULES)
+
+
 def check_sequence_kernels(report: Report) -> None:
     """--full only: the sequence kernels' launch geometry (flash
     attention, wkv6) against the VMEM budget."""
@@ -249,7 +284,9 @@ def run_analysis(strict: bool = False, full: bool = False,
     out(f"  combine contracts: {len(COMBINE_MODES)} modes traced")
     check_trainers(report, full=full)
     check_compact_buckets(report, full=full)
-    out(f"  trainer/compact traces: {report.contexts} jaxpr contexts")
+    check_serving(report, full=full)
+    out(f"  trainer/compact/serving traces: {report.contexts} "
+        f"jaxpr contexts")
     if full:
         check_sequence_kernels(report)
     check_srclint(report, root=lint_root)

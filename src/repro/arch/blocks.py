@@ -135,8 +135,10 @@ def block_apply(p, x, cfg: ArchConfig, kind: str, *,
                 positions=None, mrope_positions=None, causal=True,
                 cache=None, cache_index=None, enc_memory=None,
                 moe_impl: str = "dense", mesh=None,
-                sliding_window: Optional[int] = None):
-    """Pre-norm residual block. Returns (x, new_cache, aux_loss)."""
+                sliding_window: Optional[int] = None, valid=None):
+    """Pre-norm residual block. Returns (x, new_cache, aux_loss).
+    ``valid``: (B, P) pad mask over the first P cache slots (serving
+    with left-padded prompts); only the attention paths consume it."""
     aux = jnp.zeros((), jnp.float32)
     sw = cfg.sliding_window if sliding_window is None else sliding_window
     new_cache = None
@@ -149,7 +151,8 @@ def block_apply(p, x, cfg: ArchConfig, kind: str, *,
                 a, c_attn = mla_apply(
                     p["attn"], h, num_heads=cfg.num_heads, mla=cfg.mla,
                     positions=positions, rope_theta=cfg.rope_theta,
-                    norm_eps=cfg.norm_eps, cache=cache, cache_index=cache_index)
+                    norm_eps=cfg.norm_eps, cache=cache,
+                    cache_index=cache_index, valid=valid)
             else:
                 a = mla_apply(p["attn"], h, num_heads=cfg.num_heads,
                               mla=cfg.mla, positions=positions,
@@ -164,7 +167,7 @@ def block_apply(p, x, cfg: ArchConfig, kind: str, *,
                 rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
                 norm_eps=cfg.norm_eps, causal=causal, sliding_window=sw,
                 cache=cache, cache_index=cache_index,
-                mrope_positions=mrope_positions)
+                mrope_positions=mrope_positions, valid=valid)
             a, c_attn = out if cache is not None else (out, None)
         x = x + a
         if enc_memory is not None:

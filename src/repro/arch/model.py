@@ -145,7 +145,7 @@ class TransformerLM:
 
     def _backbone(self, params, x, *, positions, mrope_positions=None,
                   caches=None, cache_index=None, enc_memory=None,
-                  train: bool = False):
+                  valid=None, train: bool = False):
         """Runs all layer groups. caches: pytree stacked (n_groups, ...) per
         group slot, or None. Returns (x, new_caches, aux_total)."""
         cfg = self.cfg
@@ -162,7 +162,8 @@ class TransformerLM:
                 mrope_positions=mrope_positions, causal=True,
                 cache=c_i, cache_index=cache_index,
                 enc_memory=enc_memory, moe_impl=self.moe_impl,
-                mesh=self.mesh, sliding_window=cfg.sliding_window)
+                mesh=self.mesh, sliding_window=cfg.sliding_window,
+                valid=valid)
 
         block_fns = {}
         for kind in set(group_kinds):
@@ -298,12 +299,17 @@ class TransformerLM:
 
     def prefill(self, params, batch, cache_len: int):
         """Full-sequence forward filling the cache; returns (last_logits,
-        caches, next_index)."""
+        caches, next_index). Optional batch keys for left-padded serving:
+        ``positions`` (B, S) per-row RoPE positions (pad-shifted so each
+        prompt starts at 0) and ``valid`` (B, S) pad mask — pad tokens
+        are then invisible to causal attention."""
         cfg = self.cfg
         x = self._embed(params, batch)
         B, S, _ = x.shape
         caches = self.init_cache(B, cache_len)
-        positions = jnp.arange(S, dtype=jnp.int32)[None]
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.arange(S, dtype=jnp.int32)[None]
         mrope = batch.get("mrope_positions") if cfg.mrope else None
         enc_memory = None
         if cfg.encoder_layers:
@@ -312,17 +318,21 @@ class TransformerLM:
         h, new_caches, _ = self._backbone(
             params, x, positions=positions, mrope_positions=mrope,
             caches=caches, cache_index=jnp.zeros((), jnp.int32),
-            enc_memory=enc_memory)
+            enc_memory=enc_memory, valid=batch.get("valid"))
         h = norm_apply(cfg, params["final_norm"], h)
         logits = self._logits(params, h[:, -1:])
         return logits, new_caches, jnp.asarray(S, jnp.int32)
 
     def decode_step(self, params, batch, caches, index):
         """One-token step. batch: {"tokens": (B,1)} (or embeds for vlm;
-        enc_memory recomputed from enc_frames for whisper)."""
+        enc_memory recomputed from enc_frames for whisper). Left-padded
+        serving keeps passing ``valid`` (B, P) — the prompt's pad K/Vs
+        persist in the cache — and per-row ``positions`` (B, 1)."""
         cfg = self.cfg
         x = self._embed(params, batch)
-        positions = index[None, None].astype(jnp.int32)
+        positions = batch.get("positions")
+        if positions is None:
+            positions = index[None, None].astype(jnp.int32)
         mrope = batch.get("mrope_positions") if cfg.mrope else None
         enc_memory = None
         if cfg.encoder_layers:
@@ -335,7 +345,8 @@ class TransformerLM:
                     params, batch["enc_frames"].astype(_dtype(cfg)))
         h, new_caches, _ = self._backbone(
             params, x, positions=positions, mrope_positions=mrope,
-            caches=caches, cache_index=index, enc_memory=enc_memory)
+            caches=caches, cache_index=index, enc_memory=enc_memory,
+            valid=batch.get("valid"))
         h = norm_apply(cfg, params["final_norm"], h)
         logits = self._logits(params, h)
         return logits, new_caches, index + 1

@@ -61,7 +61,7 @@ import itertools
 import math
 import os
 import threading
-from typing import Any, Iterable, Optional
+from typing import Any, Optional
 
 import jax
 import numpy as np
@@ -133,74 +133,128 @@ def _handle_divergence(tr, prev, loss_val: float,
         f"(view cursor {tr.view_cursor})")
 
 
-class Trainer:
-    """Drives any GraphView iterator through a :class:`HybridParallelEngine`
-    with one shape-stable, compiled-once train step.
+def _assert_once_per_bucket(traces: int, touched: int, what: str) -> None:
+    """The bucketed trace-count contract, shared by the train step
+    (:meth:`CompactTrainer.assert_compiled_per_bucket`) and the serving
+    infer steps (:class:`BucketedFn`): exactly one trace per touched
+    bucket shape."""
+    if touched == 0:
+        raise RetraceError(
+            f"{what} never ran — exercise it before asserting the "
+            "once-per-bucket contract")
+    if traces != touched:
+        raise RetraceError(
+            f"{what} was traced {traces} times over {touched} touched "
+            f"bucket shapes (expected exactly one trace per bucket): "
+            "an input was staged with a shape or plan geometry not "
+            "determined by its bucket")
 
-    The step's shapes are fixed by the partition plan — ``(P, K, n_m_pad)``
-    node masks, ``(P, K, e_pad)`` edge masks — so global-, mini- and
-    cluster-batch views all hit the same executable. View buffers are
-    donated to XLA (every step stages a fresh view, so the device-side
-    mask buffers are reused in place). ``trace_counts`` records how often
-    the step (and the eval ``infer``) were actually traced.
+
+class BucketedFn:
+    """One jitted ``fn(params, block)`` over bucket-padded compact blocks
+    with once-per-bucket trace accounting — the infer-path extraction of
+    :class:`CompactTrainer`'s train-step contract, which
+    :mod:`repro.serving` programs against. ``jit``'s signature cache keys
+    on leaf shapes (pure functions of the bucket), so the callable holds
+    exactly one executable per touched ``(n_pad, e_pad)`` shape;
+    :meth:`assert_compiled_per_bucket` certifies it."""
+
+    def __init__(self, fn, name: str = "infer"):
+        self.name = name
+        self.traces = 0
+        self.buckets_touched: set = set()
+
+        def counted(params, block):
+            # runs only while tracing: one increment per (bucket) compile
+            self.traces += 1
+            return fn(params, block)
+
+        self.jitted = jax.jit(counted)
+
+    def __call__(self, params, block):
+        self.buckets_touched.add((int(block.x.shape[0]),
+                                  int(block.src.shape[0])))
+        return self.jitted(params, block)
+
+    def assert_compiled_per_bucket(self) -> None:
+        _assert_once_per_bucket(self.traces, len(self.buckets_touched),
+                                f"{self.name} step")
+
+    def jaxpr(self, params, block):
+        """Jaxpr over ``block`` for :mod:`repro.analysis` rules; tracing
+        runs the counted body, so the counters are saved/restored (the
+        certificate must survive analysis)."""
+        saved, saved_b = self.traces, set(self.buckets_touched)
+        try:
+            return jax.make_jaxpr(self.jitted)(params, block)
+        finally:
+            self.traces, self.buckets_touched = saved, saved_b
+
+
+class BaseTrainer:
+    """The shared trainer surface: one ``fit`` loop (prefetch pipelines,
+    loss sync policy, divergence handling, eval/checkpoint cadence), plus
+    ``save``/``restore``/``reset`` — everything that is identical between
+    the partition-plan :class:`Trainer` and the bucketed
+    :class:`CompactTrainer`. ``repro.runtime``, ``repro.serving`` and the
+    :mod:`repro.api` facade program against this type instead of
+    ``isinstance`` forks.
+
+    Subclasses provide four hooks:
+
+    - ``_init_params(seed)`` — fresh model params;
+    - ``_make_prepare()`` — a ``view -> staged`` callable for one fit
+      (prefetch workers call it concurrently);
+    - ``_dispatch(staged)`` — one raw step call, returning
+      ``(params, opt_state, loss)``;
+    - ``assert_trace_contract()`` — the subclass's compile-count
+      certificate (compiled-once vs once-per-bucket).
     """
 
-    def __init__(self, engine, opt, params: Optional[Any] = None,
-                 seed: int = 0, prefetch_depth: int = 2,
-                 fault_policy: Optional[FaultPolicy] = None,
-                 injector: Optional[FaultInjector] = None):
-        self.engine = engine
+    # subclasses set in __init__: opt, runtime, params, opt_state,
+    # step_num, history, prefetch_depth, view_cursor, _resume_cursor
+
+    def _init_common(self, opt, prefetch_depth: int,
+                     fault_policy: Optional[FaultPolicy],
+                     injector: Optional[FaultInjector]) -> None:
         self.opt = opt
-        self.plan = engine.plan
         # fault-tolerance runtime: None = production fast path (no retry
         # wrappers, no per-step loss sync). The injector only ever fires
         # on host-side supervision points — traced code never sees it.
         self.runtime = _make_runtime(fault_policy, injector)
-        if params is None:
-            params = engine.model.init(jax.random.PRNGKey(seed),
-                                       engine.sg.feature_dim)
-        self.params = params
-        self.opt_state = opt.init(params)
         self.step_num = 0
         self.history: list = []
         self.prefetch_depth = prefetch_depth
-        self.trace_counts = {"train_step": 0, "infer": 0}
         # view-stream position (checkpointed so restore() can fast-forward
         # the stream itself instead of asking the caller to)
         self.view_cursor = 0
         self._resume_cursor: Optional[int] = None
 
-        lg = engine.make_loss_and_grad()
+    # -- subclass hooks --------------------------------------------------------
 
-        def _step(params, opt_state, data, view):
-            # runs only while tracing — this is the compile counter the
-            # compiled-once contract is certified against
-            self.trace_counts["train_step"] += 1
-            loss, grads = lg(params, data, view)
-            new_params, new_state = opt.update(grads, opt_state, params)
-            return new_params, new_state, loss
+    def _init_params(self, seed: int):
+        raise NotImplementedError
 
-        # view buffers are donated so XLA reuses the device-side mask
-        # buffers in place step over step (donation is a no-op warning on
-        # the CPU backend, so only ask for it where it exists)
-        self._donate_views = jax.default_backend() != "cpu"
-        donate = (3,) if self._donate_views else ()
-        self._step = jax.jit(_step, donate_argnums=donate)
-        self._infer = engine.make_infer(on_trace=self._count_infer_trace)
-        # single-slot (view, staged-arrays) cache; holding the view object
-        # itself both bounds the cache and keeps the identity check sound
-        # (an id() key could be reused by a garbage-collected view)
-        self._eval_cache: Optional[tuple] = None
+    def _make_prepare(self):
+        raise NotImplementedError
 
-    def _count_infer_trace(self):
-        self.trace_counts["infer"] += 1
+    def _dispatch(self, staged):
+        raise NotImplementedError
+
+    def _on_reset(self) -> None:
+        """Subclass-specific reset extras (e.g. eval caches)."""
+
+    def evaluate(self, view, mask: Optional[np.ndarray] = None) -> float:
+        raise NotImplementedError
+
+    def assert_trace_contract(self) -> None:
+        raise NotImplementedError
 
     # -- the training loop ----------------------------------------------------
 
-    def fit(self, views: Iterable[GraphView], steps: Optional[int] = None,
+    def fit(self, views, steps: Optional[int] = None,
             prefetch: bool = True, prefetch_workers: Optional[int] = None,
-            eval_every: int = 0,
-            eval_view: Optional[GraphView] = None,
+            eval_every: int = 0, eval_view=None,
             eval_mask: Optional[np.ndarray] = None,
             checkpoint_every: int = 0,
             checkpoint_dir: Optional[str] = None,
@@ -246,32 +300,7 @@ class Trainer:
             from repro.checkpoint import latest_step
             if latest_step(checkpoint_dir) is not None:
                 self.restore(checkpoint_dir)
-        # shard staging retries transient device_put failures when a
-        # runtime is configured (engine-side hook)
-        stage = lambda v: self.engine.stage_view(  # noqa: E731
-            shard_view(self.plan, v), retry=rt)
-        if self._donate_views:
-            # donated buffers are consumed by the step — always restage
-            prepare = stage
-        else:
-            # static streams (global batch yields one GraphView object)
-            # are staged exactly once and the device buffers reused; the
-            # cache holds the view itself so the identity check can't be
-            # fooled by a freed view's id being reused. Multiple prefetch
-            # workers may race here: staged is written BEFORE the view key
-            # and misses return their locally staged value, so a racing
-            # reader can at worst duplicate work, never observe a
-            # half-written entry
-            cache = {"view": None, "staged": None}
-
-            def prepare(v):
-                if cache["view"] is v:
-                    return cache["staged"]
-                staged = stage(v)
-                cache["staged"] = staged
-                cache["view"] = v
-                return staged
-
+        prepare = self._make_prepare()
         stream = views if isinstance(views, ViewStream) else None
         # any fit consumes a pending restore cursor — a plain-iterator fit
         # must not leave it armed to silently fast-forward a later,
@@ -320,7 +349,6 @@ class Trainer:
         watchdog = policy.timeout("step") if policy is not None else None
         sync_now = guard or watchdog is not None
         events = rt.events if rt is not None else []
-        data = self.engine._device_data
         losses, pending, evals = [], [], []
         try:
             # idx counts views consumed THIS fit — monotonic even across
@@ -338,15 +366,14 @@ class Trainer:
                 # skip_view recovery
                 prev = (self.params, self.opt_state, self.step_num)
                 if rt is None:
-                    self.params, self.opt_state, loss = self._step(
-                        self.params, self.opt_state, data, staged)
+                    self.params, self.opt_state, loss = \
+                        self._dispatch(staged)
                 else:
                     # step dispatch is a retryable stage too: a transient
                     # failure re-dispatches the same (params, staged) —
                     # deterministic by construction
                     self.params, self.opt_state, loss = rt(
-                        "step", lambda: self._step(
-                            self.params, self.opt_state, data, staged),
+                        "step", lambda: self._dispatch(staged),
                         key=self.step_num)
                 self.step_num += 1
                 self.view_cursor = (stream.cursor if stream is not None
@@ -389,26 +416,6 @@ class Trainer:
                   checkpoint_dir: Optional[str], events: list) -> None:
         _handle_divergence(self, prev, loss_val, checkpoint_dir, events)
 
-    # -- eval / infer -----------------------------------------------------------
-
-    def evaluate(self, view: GraphView,
-                 mask: Optional[np.ndarray] = None) -> float:
-        """Distributed inference over ``view`` (compiled once, shared with
-        every later eval); accuracy on ``mask`` (default: the graph's test
-        mask, falling back to the view's loss mask)."""
-        if self._eval_cache is None or self._eval_cache[0] is not view:
-            self._eval_cache = (view, shard_view(self.plan, view))
-        logits = self._infer(self.params, dict(self._eval_cache[1]))
-        preds = self.engine.gather_predictions(np.asarray(logits)).argmax(-1)
-        g = view.graph
-        if mask is None:
-            mask = (g.test_mask if g.test_mask is not None
-                    else view.loss_mask > 0)
-        mask = np.asarray(mask) > 0
-        if not mask.any():
-            return 0.0
-        return float((preds[mask] == g.labels[mask]).mean())
-
     # -- checkpointing ---------------------------------------------------------
 
     def save(self, directory: str) -> str:
@@ -435,11 +442,12 @@ class Trainer:
 
     def restore(self, directory: str, step: Optional[int] = None) -> int:
         """Load params/opt state/step from a checkpoint. The restored
-        leaves match the compiled step's signature, so resuming does not
-        retrace. If the checkpoint recorded a view-stream cursor, the next
-        ``fit`` over a :class:`ViewStream` fast-forwards the stream to it
-        automatically; for plain iterators the returned step lets the
-        caller fast-forward by hand (legacy behavior)."""
+        leaves match the compiled step's signature (per bucket, for the
+        bucketed trainer), so resuming does not retrace. If the
+        checkpoint recorded a view-stream cursor, the next ``fit`` over a
+        :class:`ViewStream` fast-forwards the stream to it automatically;
+        for plain iterators the returned step lets the caller
+        fast-forward by hand (legacy behavior)."""
         rt = self.runtime
         if rt is None:
             ck = load_checkpoint(directory, step)
@@ -454,22 +462,139 @@ class Trainer:
             self._resume_cursor = self.view_cursor
         return self.step_num
 
-    # -- contracts / lifecycle ---------------------------------------------------
+    # -- lifecycle -------------------------------------------------------------
 
     def reset(self, params: Optional[Any] = None, seed: int = 0):
-        """Fresh params/opt state **keeping the compiled step**, so one
+        """Fresh params/opt state **keeping the compiled step(s)**, so one
         compile serves many runs (strategy comparisons reset between
-        strategies and still certify compiled-once)."""
+        strategies and still certify the trace contract)."""
         if params is None:
-            params = self.engine.model.init(jax.random.PRNGKey(seed),
-                                            self.engine.sg.feature_dim)
+            params = self._init_params(seed)
         self.params = params
         self.opt_state = self.opt.init(params)
         self.step_num = 0
         self.history = []
-        self._eval_cache = None
         self.view_cursor = 0
         self._resume_cursor = None
+        self._on_reset()
+
+
+class Trainer(BaseTrainer):
+    """Drives any GraphView iterator through a :class:`HybridParallelEngine`
+    with one shape-stable, compiled-once train step.
+
+    The step's shapes are fixed by the partition plan — ``(P, K, n_m_pad)``
+    node masks, ``(P, K, e_pad)`` edge masks — so global-, mini- and
+    cluster-batch views all hit the same executable. View buffers are
+    donated to XLA (every step stages a fresh view, so the device-side
+    mask buffers are reused in place). ``trace_counts`` records how often
+    the step (and the eval ``infer``) were actually traced.
+    """
+
+    def __init__(self, engine, opt, params: Optional[Any] = None,
+                 seed: int = 0, prefetch_depth: int = 2,
+                 fault_policy: Optional[FaultPolicy] = None,
+                 injector: Optional[FaultInjector] = None):
+        self.engine = engine
+        self.plan = engine.plan
+        self._init_common(opt, prefetch_depth, fault_policy, injector)
+        if params is None:
+            params = self._init_params(seed)
+        self.params = params
+        self.opt_state = opt.init(params)
+        self.trace_counts = {"train_step": 0, "infer": 0}
+
+        lg = engine.make_loss_and_grad()
+
+        def _step(params, opt_state, data, view):
+            # runs only while tracing — this is the compile counter the
+            # compiled-once contract is certified against
+            self.trace_counts["train_step"] += 1
+            loss, grads = lg(params, data, view)
+            new_params, new_state = opt.update(grads, opt_state, params)
+            return new_params, new_state, loss
+
+        # view buffers are donated so XLA reuses the device-side mask
+        # buffers in place step over step (donation is a no-op warning on
+        # the CPU backend, so only ask for it where it exists)
+        self._donate_views = jax.default_backend() != "cpu"
+        donate = (3,) if self._donate_views else ()
+        self._step = jax.jit(_step, donate_argnums=donate)
+        self._infer = engine.make_infer(on_trace=self._count_infer_trace)
+        # single-slot (view, staged-arrays) cache; holding the view object
+        # itself both bounds the cache and keeps the identity check sound
+        # (an id() key could be reused by a garbage-collected view)
+        self._eval_cache: Optional[tuple] = None
+
+    def _count_infer_trace(self):
+        self.trace_counts["infer"] += 1
+
+    # -- BaseTrainer hooks -----------------------------------------------------
+
+    def _init_params(self, seed: int):
+        return self.engine.model.init(jax.random.PRNGKey(seed),
+                                      self.engine.sg.feature_dim)
+
+    def _make_prepare(self):
+        # shard staging retries transient device_put failures when a
+        # runtime is configured (engine-side hook)
+        rt = self.runtime
+        stage = lambda v: self.engine.stage_view(  # noqa: E731
+            shard_view(self.plan, v), retry=rt)
+        if self._donate_views:
+            # donated buffers are consumed by the step — always restage
+            return stage
+        # static streams (global batch yields one GraphView object)
+        # are staged exactly once and the device buffers reused; the
+        # cache holds the view itself so the identity check can't be
+        # fooled by a freed view's id being reused. Multiple prefetch
+        # workers may race here: staged is written BEFORE the view key
+        # and misses return their locally staged value, so a racing
+        # reader can at worst duplicate work, never observe a
+        # half-written entry
+        cache = {"view": None, "staged": None}
+
+        def prepare(v):
+            if cache["view"] is v:
+                return cache["staged"]
+            staged = stage(v)
+            cache["staged"] = staged
+            cache["view"] = v
+            return staged
+
+        return prepare
+
+    def _dispatch(self, staged):
+        return self._step(self.params, self.opt_state,
+                          self.engine._device_data, staged)
+
+    def _on_reset(self) -> None:
+        self._eval_cache = None
+
+    def assert_trace_contract(self) -> None:
+        self.assert_compiled_once()
+
+    # -- eval / infer -----------------------------------------------------------
+
+    def evaluate(self, view: GraphView,
+                 mask: Optional[np.ndarray] = None) -> float:
+        """Distributed inference over ``view`` (compiled once, shared with
+        every later eval); accuracy on ``mask`` (default: the graph's test
+        mask, falling back to the view's loss mask)."""
+        if self._eval_cache is None or self._eval_cache[0] is not view:
+            self._eval_cache = (view, shard_view(self.plan, view))
+        logits = self._infer(self.params, dict(self._eval_cache[1]))
+        preds = self.engine.gather_predictions(np.asarray(logits)).argmax(-1)
+        g = view.graph
+        if mask is None:
+            mask = (g.test_mask if g.test_mask is not None
+                    else view.loss_mask > 0)
+        mask = np.asarray(mask) > 0
+        if not mask.any():
+            return 0.0
+        return float((preds[mask] == g.labels[mask]).mean())
+
+    # -- contracts ---------------------------------------------------------------
 
     def assert_compiled_once(self):
         """The trace-count contract: after any number of steps across any
@@ -525,7 +650,7 @@ class Trainer:
             self.trace_counts = saved
 
 
-class CompactTrainer:
+class CompactTrainer(BaseTrainer):
     """Single-process trainer over size-bucketed compact blocks.
 
     Where :class:`Trainer` fixes the step's shapes with a PartitionPlan,
@@ -549,24 +674,17 @@ class CompactTrainer:
         from repro.core.mpgnn import accuracy_block, loss_block
         self.model = model
         self.g = g
-        self.opt = opt
-        self.runtime = _make_runtime(fault_policy, injector)
+        self._init_common(opt, prefetch_depth, fault_policy, injector)
         backend = getattr(model, "aggregate_backend", "reference")
         self.stager = CompactBlockBuilder(
             g, model.K, buckets=buckets, slots=slots, gcn_norm=gcn_norm,
             csc_plan=(backend == "csc"))
         self.buckets = self.stager.buckets
         if params is None:
-            params = model.init(jax.random.PRNGKey(seed),
-                                g.node_features.shape[1])
+            params = self._init_params(seed)
         self.params = params
         self.opt_state = opt.init(params)
-        self.step_num = 0
-        self.history: list = []
-        self.prefetch_depth = prefetch_depth
         self.trace_counts = {"train_step": 0}
-        self.view_cursor = 0
-        self._resume_cursor: Optional[int] = None
         # (n_pad, e_pad) shapes actually staged — the denominator of the
         # once-per-bucket contract
         self.buckets_touched: set = set()
@@ -606,145 +724,20 @@ class CompactTrainer:
             # block is detached before the lock releases.
             return jax.tree_util.tree_map(np.array, block)
 
-    # -- the training loop ----------------------------------------------------
+    # -- BaseTrainer hooks -----------------------------------------------------
 
-    def fit(self, views, steps: Optional[int] = None, prefetch: bool = True,
-            prefetch_workers: Optional[int] = None, eval_every: int = 0,
-            eval_view=None, eval_mask: Optional[np.ndarray] = None,
-            checkpoint_every: int = 0, checkpoint_dir: Optional[str] = None,
-            max_in_flight: int = 2, log_every: int = 0, log=print,
-            resume: bool = False) -> dict:
-        """Run ``steps`` views through the bucketed step; same contract
-        and return shape as :meth:`Trainer.fit` (losses synced at the
-        end, ViewStreams get the deterministic multi-worker prefetch,
-        plain iterators the double-buffered pipeline, the same
-        checkpoint / resume / divergence handling)."""
-        rt = self.runtime
-        if resume and checkpoint_dir:
-            from repro.checkpoint import latest_step
-            if latest_step(checkpoint_dir) is not None:
-                self.restore(checkpoint_dir)
-        stream = views if isinstance(views, ViewStream) else None
-        resume_cur, self._resume_cursor = self._resume_cursor, None
-        if stream is not None and resume_cur is not None \
-                and stream.cursor < resume_cur:
-            stream.seek(resume_cur)
-        prep = self._prepare if rt is None else (
-            lambda v: rt("view_build", lambda: self._prepare(v)))
-        if stream is not None:
-            if prefetch:
-                if prefetch_workers is None:
-                    prefetch_workers = max(
-                        1, min(4, (os.cpu_count() or 2) - 1))
-                staged_iter = _MultiStreamPrefetcher(
-                    stream, self._prepare, steps, workers=prefetch_workers,
-                    depth=self.prefetch_depth, runtime=rt)
-            else:
-                bounded = (itertools.islice(stream, steps)
-                           if steps is not None else stream)
-                staged_iter = (prep(v) for v in bounded)
-        else:
-            if steps is not None:
-                views = itertools.islice(views, steps)
-            staged_iter = (_ViewPrefetcher(views, self._prepare,
-                                           self.prefetch_depth,
-                                           runtime=rt)
-                           if prefetch else
-                           (prep(v) for v in views))
+    def _init_params(self, seed: int):
+        return self.model.init(jax.random.PRNGKey(seed),
+                               self.g.node_features.shape[1])
 
-        policy = rt.policy if rt is not None else None
-        inj = rt.injector if rt is not None else None
-        guard = policy is not None and (policy.check_finite
-                                        or policy.on_divergence != "raise")
-        watchdog = policy.timeout("step") if policy is not None else None
-        sync_now = guard or watchdog is not None
-        events = rt.events if rt is not None else []
-        losses, pending, evals = [], [], []
-        try:
-            # idx: monotonic per-fit view count (see Trainer.fit)
-            for idx, staged in enumerate(staged_iter):
-                if max_in_flight > 0 and len(pending) >= max_in_flight:
-                    losses.append(float(pending.pop(0)))
-                prev = (self.params, self.opt_state, self.step_num)
-                if rt is None:
-                    self.params, self.opt_state, loss = self._step(
-                        self.params, self.opt_state, staged)
-                else:
-                    self.params, self.opt_state, loss = rt(
-                        "step", lambda: self._step(
-                            self.params, self.opt_state, staged),
-                        key=self.step_num)
-                self.step_num += 1
-                self.view_cursor = (stream.cursor if stream is not None
-                                    else self.step_num)
-                if sync_now:
-                    loss_val = sync_with_timeout(
-                        lambda: float(loss), watchdog)
-                    if inj is not None and inj.fires(
-                            "diverge", key=idx):
-                        loss_val = float("nan")   # simulated divergence
-                    if guard and not math.isfinite(loss_val):
-                        _handle_divergence(self, prev, loss_val,
-                                           checkpoint_dir, events)
-                        continue
-                    losses.append(loss_val)
-                else:
-                    pending.append(loss)
-                if (eval_every and eval_view is not None
-                        and self.step_num % eval_every == 0):
-                    rec = {"step": self.step_num, "loss": float(loss),
-                           "eval_acc": self.evaluate(eval_view, eval_mask)}
-                    evals.append(rec)
-                    if log_every:
-                        log(f"step {rec['step']:5d}  "
-                            f"loss {rec['loss']:.4f}  "
-                            f"eval_acc {rec['eval_acc']:.4f}")
-                if (checkpoint_every and checkpoint_dir
-                        and self.step_num % checkpoint_every == 0):
-                    self.save(checkpoint_dir)
-        finally:
-            if isinstance(staged_iter,
-                          (_ViewPrefetcher, _MultiStreamPrefetcher)):
-                staged_iter.close()
-        losses.extend(float(l) for l in pending)
-        self.history.extend(evals)
-        return {"losses": losses, "evals": evals, "steps": self.step_num,
-                "events": list(events)}
+    def _make_prepare(self):
+        return self._prepare
 
-    # -- checkpointing ---------------------------------------------------------
+    def _dispatch(self, staged):
+        return self._step(self.params, self.opt_state, staged)
 
-    def save(self, directory: str) -> str:
-        rt = self.runtime
-        keep = rt.policy.keep_checkpoints if rt is not None else 0
-
-        def do():
-            return save_checkpoint(directory, self.step_num, {
-                "params": self.params,
-                "opt_state": self.opt_state,
-                "step": np.asarray(self.step_num, np.int64),
-                "view_cursor": np.asarray(self.view_cursor, np.int64),
-            }, keep=keep)
-
-        if rt is None:
-            return do()
-        return rt("checkpoint_save", do)
-
-    def restore(self, directory: str, step: Optional[int] = None) -> int:
-        """Load params/opt state/step; restored leaf shapes match the
-        per-bucket compiled steps, so resuming does not retrace."""
-        rt = self.runtime
-        if rt is None:
-            ck = load_checkpoint(directory, step)
-        else:
-            ck = rt("checkpoint_load",
-                    lambda: load_checkpoint(directory, step))
-        self.params = ck["params"]
-        self.opt_state = ck["opt_state"]
-        self.step_num = int(ck["step"])
-        if "view_cursor" in ck:
-            self.view_cursor = int(ck["view_cursor"])
-            self._resume_cursor = self.view_cursor
-        return self.step_num
+    def assert_trace_contract(self) -> None:
+        self.assert_compiled_per_bucket()
 
     # -- eval -------------------------------------------------------------------
 
@@ -766,36 +759,14 @@ class CompactTrainer:
             m = block.loss_mask
         return float(self._acc(self.params, block, m))
 
-    # -- contracts / lifecycle ---------------------------------------------------
-
-    def reset(self, params: Optional[Any] = None, seed: int = 0):
-        """Fresh params/opt state keeping the per-bucket compiled steps."""
-        if params is None:
-            params = self.model.init(jax.random.PRNGKey(seed),
-                                     self.g.node_features.shape[1])
-        self.params = params
-        self.opt_state = self.opt.init(params)
-        self.step_num = 0
-        self.history = []
-        self.view_cursor = 0
-        self._resume_cursor = None
+    # -- contracts ---------------------------------------------------------------
 
     def assert_compiled_per_bucket(self):
         """The bucketed trace-count contract: the step must have been
         traced exactly once per *touched* bucket shape — repeat epochs
         over the same buckets add zero traces."""
-        n = self.trace_counts["train_step"]
-        touched = len(self.buckets_touched)
-        if touched == 0:
-            raise RetraceError(
-                "assert_compiled_per_bucket: the train step never ran — "
-                "call fit() before asserting the contract")
-        if n != touched:
-            raise RetraceError(
-                f"train step was traced {n} times over {touched} touched "
-                f"bucket shapes (expected exactly one trace per bucket): "
-                "a view was staged with a shape or plan geometry not "
-                "determined by its bucket")
+        _assert_once_per_bucket(self.trace_counts["train_step"],
+                                len(self.buckets_touched), "train step")
 
     # -- static analysis hooks ---------------------------------------------------
 

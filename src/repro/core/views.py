@@ -252,10 +252,16 @@ class BucketSpec:
 
 
 class _CompactSlot:
-    """One bucket-shaped set of reusable block buffers."""
+    """One bucket-shaped set of reusable block buffers. ``feature_dim``
+    overrides the feature width when the staged ``x`` rows come from a
+    source other than ``g.node_features`` (the serving embedding cache
+    stages cached hidden-layer rows, whose width is the model's hidden
+    dim, not the raw feature dim)."""
 
-    def __init__(self, g: Graph, K: int, n_pad: int, e_pad: int):
-        F = g.node_features.shape[1]
+    def __init__(self, g: Graph, K: int, n_pad: int, e_pad: int,
+                 feature_dim: Optional[int] = None):
+        F = (g.node_features.shape[1] if feature_dim is None
+             else int(feature_dim))
         self.src = np.zeros(e_pad, np.int32)
         self.dst = np.zeros(e_pad, np.int32)
         self.edge_mask = np.zeros(e_pad, np.float32)
@@ -273,12 +279,17 @@ class _CompactSlot:
 
 def _fill_compact_block(view: CompactView, slot: _CompactSlot,
                         gcn_norm: bool, csc_plan: bool, block_n: int,
-                        block_e: int) -> GraphBlock:
+                        block_e: int,
+                        features: Optional[np.ndarray] = None
+                        ) -> GraphBlock:
     """Gather the view's node/edge data into (zeroed) bucket-shaped
     buffers. Pad edges keep src = dst = 0 with edge_mask 0 — inert under
-    every combine mode, exactly like the dense path's padding."""
+    every combine mode, exactly like the dense path's padding.
+    ``features`` substitutes an alternate (N, D) per-node row source for
+    ``g.node_features`` (the serving cache's embedding table)."""
     g, K = view.graph, view.K
     n, e = view.num_nodes, view.num_edges
+    x_src = g.node_features if features is None else features
     slot.src.fill(0)
     slot.src[:e] = view.src_local
     slot.dst.fill(0)
@@ -288,7 +299,7 @@ def _fill_compact_block(view: CompactView, slot: _CompactSlot,
     slot.node_mask.fill(0.0)
     slot.node_mask[:n] = 1.0
     slot.x.fill(0.0)
-    slot.x[:n] = g.node_features[view.nodes]
+    slot.x[:n] = x_src[view.nodes]
     slot.y.fill(0)
     slot.y[:n] = g.labels[view.nodes]
     slot.loss.fill(0.0)
@@ -341,9 +352,13 @@ class CompactBlockBuilder:
     def __init__(self, g: Graph, K: int,
                  buckets: Optional[BucketSpec] = None, slots: int = 2,
                  gcn_norm: bool = True, csc_plan: bool = False,
-                 block_n: int = 128, block_e: int = 256):
+                 block_n: int = 128, block_e: int = 256,
+                 features: Optional[np.ndarray] = None):
         self.g = g
         self.K = int(K)
+        # alternate per-node row source for block.x (the serving embedding
+        # cache passes its table; updated in place, so the ref stays live)
+        self.features = features
         self.buckets = buckets or BucketSpec.for_graph(g)
         self.slots = max(1, int(slots))
         self.gcn_norm = bool(gcn_norm)
@@ -395,12 +410,16 @@ class CompactBlockBuilder:
         shape = self._pick(view)
         ring = self._rings.setdefault(shape, [])
         if len(ring) < self.slots:
-            ring.append(_CompactSlot(self.g, self.K, *shape))
+            fdim = (None if self.features is None
+                    else self.features.shape[1])
+            ring.append(_CompactSlot(self.g, self.K, *shape,
+                                     feature_dim=fdim))
         turn = self._turns.get(shape, 0)
         self._turns[shape] = turn + 1
         return _fill_compact_block(view, ring[turn % len(ring)],
                                    self.gcn_norm, self.csc_plan,
-                                   self.block_n, self.block_e)
+                                   self.block_n, self.block_e,
+                                   features=self.features)
 
 
 # ---------------------------------------------------------------------------

@@ -51,11 +51,12 @@ class ServerStats:
 class BatchServer:
     """Fixed-batch lockstep server (padding inactive slots).
 
-    Known demo limitation: variable-length prompts are left-padded and the
-    pad tokens are visible to causal attention (a production server adds a
-    per-request validity mask or packs same-length buckets — the GraphView
-    'cluster-batch by length' idea); generations here are from random
-    weights anyway.
+    Variable-length prompts are left-padded (right-aligned so the last
+    token sits at a shared index) and a per-request validity mask rides
+    along through prefill *and* decode: the pad K/Vs persist in the
+    cache, so every step masks them out of attention, and per-row RoPE
+    positions are pad-shifted so each prompt starts at position 0 —
+    batched generations match running each request solo.
     """
 
     def __init__(self, arch: str, batch_size: int, cache_len: int,
@@ -77,22 +78,33 @@ class BatchServer:
         self._decode = jax.jit(self.model.decode_step)
 
     def _pad_prompts(self, reqs: List[Request]):
-        """Left-pad to a common length (right-aligned prompts so the last
-        token sits at a shared index)."""
+        """Left-pad to a common length plus the pad-correction tensors:
+        a (B, max_p) validity mask (unused batch slots stay all-True —
+        an all-masked row would softmax over nothing) and per-row
+        positions shifted so every real prompt starts at 0."""
         max_p = max(len(r.prompt) for r in reqs)
         toks = np.zeros((self.batch_size, max_p), np.int32)
+        valid = np.ones((self.batch_size, max_p), bool)
+        pads = np.zeros(self.batch_size, np.int32)
         for i, r in enumerate(reqs):
-            toks[i, max_p - len(r.prompt):] = r.prompt
-        return jnp.asarray(toks), max_p
+            pads[i] = max_p - len(r.prompt)
+            toks[i, pads[i]:] = r.prompt
+            valid[i, :pads[i]] = False
+        positions = np.maximum(np.arange(max_p)[None] - pads[:, None], 0)
+        return (jnp.asarray(toks), jnp.asarray(valid),
+                jnp.asarray(positions, jnp.int32),
+                jnp.asarray(pads), max_p)
 
     def run(self, requests: List[Request]) -> ServerStats:
         if len(requests) > self.batch_size:
             raise ValueError(f"{len(requests)} requests exceed the "
                              f"server batch size {self.batch_size}")
         reqs = list(requests)
-        toks, plen = self._pad_prompts(reqs)
+        toks, valid, positions, pads, plen = self._pad_prompts(reqs)
         t0 = time.perf_counter()
-        logits, caches, idx = self._prefill(self.params, {"tokens": toks})
+        logits, caches, idx = self._prefill(
+            self.params, {"tokens": toks, "valid": valid,
+                          "positions": positions})
         jax.block_until_ready(logits)
         self.stats.prefill_s += time.perf_counter() - t0
         self.stats.prefill_tokens += plen * len(reqs)
@@ -102,8 +114,10 @@ class BatchServer:
             r.out.append(int(cur[i]))
         t0 = time.perf_counter()
         while not all(r.done for r in reqs):
+            step_pos = (idx - pads)[:, None].astype(jnp.int32)
             logits, caches, idx = self._decode(
-                self.params, {"tokens": cur[:, None]}, caches, idx)
+                self.params, {"tokens": cur[:, None], "valid": valid,
+                              "positions": step_pos}, caches, idx)
             cur = jnp.argmax(logits[:, -1], -1)
             self.stats.decode_tokens += sum(not r.done for r in reqs)
             for i, r in enumerate(reqs):

@@ -41,152 +41,22 @@ def train_gnn(dataset: str, model_name: str, strategy: str, steps: int,
               compact: bool = False, fault_policy=None,
               checkpoint_dir: Optional[str] = None,
               checkpoint_every: int = 0, resume: bool = False) -> dict:
-    from repro.graph import make_dataset
-    from repro.models import make_gnn
-    from repro.core.mpgnn import loss_block, accuracy_block
-    from repro.core.strategies import global_batch_view, strategy_views
-    from repro.core.clustering import label_propagation_clusters
-    from repro.optim import adam
-
-    g = make_dataset(dataset, seed=seed)
-    edge_dim = (g.edge_features.shape[1]
-                if g.edge_features is not None else 0)
-    if model_name == "gat_e" and edge_dim == 0:
-        raise ValueError("gat_e needs an edge-attributed dataset "
-                         "(alipay_like)")
-    g = g.add_self_loops() if model_name == "gcn" else g
-    num_classes = int(g.labels.max()) + 1
-    cfg = GNNConfig(model=model_name, num_layers=num_layers,
-                    hidden_dim=hidden, num_classes=num_classes,
-                    feature_dim=g.node_features.shape[1],
-                    edge_feature_dim=edge_dim, num_heads=4)
-    model = make_gnn(cfg)
-    params = model.init(jax.random.PRNGKey(seed), cfg.feature_dim)
-    opt = adam(lr, weight_decay=5e-4)
-
-    # views per strategy, through the shared strategy_views entry point.
-    # mini: 10% of labeled nodes per step (the paper's 1% suits graphs
-    # with ~100k+ labeled nodes; tiny synthetics need larger batches)
-    labeled = int((g.train_mask if g.train_mask is not None
-                   else np.ones(g.num_nodes, bool)).sum())
-    clusters = None
-    if strategy == "cluster":
-        clusters = label_propagation_clusters(
-            g, max_cluster_size=max(64, g.num_nodes // 50), seed=seed)
-    # compact sampled-subgraph views (local-id blocks + bucketed padding)
-    # apply to the sampling strategies; the global view IS the graph
-    compact = compact and strategy in ("mini", "cluster")
-    views = strategy_views(
-        g, strategy, cfg.num_layers, seed=seed,
-        batch_nodes=max(32, labeled // 10), clusters=clusters,
-        clusters_per_batch=max(1, (int(clusters.max()) + 1) // 20)
-        if clusters is not None else 0,
-        halo_hops=0, compact=compact)
-
-    gcn_norm = model_name == "gcn"
-    test_mask = (g.test_mask if g.test_mask is not None else g.train_mask)
-
-    if use_engine:
-        # distributed path: the compiled-once Trainer drives the engine
-        # (vectorized shard_view + prefetch pipeline + eval through the
-        # engine's distributed infer)
-        from repro.core.partition import build_partitions
-        from repro.core.engine import HybridParallelEngine
-        from repro.core.trainer import Trainer
-        sg = build_partitions(g, use_engine, method=partition_method,
-                              gcn_norm=gcn_norm)
-        engine = HybridParallelEngine(model, sg)
-        trainer = Trainer(engine, opt, params=params,
-                          fault_policy=fault_policy)
-        gbv = global_batch_view(g, cfg.num_layers)
-        mask = test_mask.astype(np.float32)
-        t0 = time.perf_counter()
-        out = trainer.fit(views, steps=steps, eval_every=eval_every,
-                          eval_view=gbv, eval_mask=mask,
-                          prefetch_workers=prefetch_workers,
-                          checkpoint_every=checkpoint_every,
-                          checkpoint_dir=checkpoint_dir, resume=resume,
-                          log_every=1, log=log.info)
-        wall = time.perf_counter() - t0
-        trainer.assert_compiled_once()
-        history = [{"step": e["step"], "loss": e["loss"],
-                    "test_acc": e["eval_acc"]} for e in out["evals"]]
-        if history and history[-1]["step"] == steps:
-            final_acc = history[-1]["test_acc"]   # fit already evaluated
-        else:
-            final_acc = trainer.evaluate(gbv, mask)
-            history.append({"step": steps, "loss": out["losses"][-1],
-                            "test_acc": final_acc})
-        return {"history": history, "wall_s": wall,
-                "params": trainer.params, "final_acc": final_acc,
-                "model": model, "graph": g}
-
-    # checkpoint/fault flags need a supervised trainer; the bucketed
-    # trainer accepts dense views too (one full-graph bucket), so route
-    # runtime-flagged single-process runs through it rather than
-    # silently dropping the flags on the bare jit loop below
-    needs_runtime = (fault_policy is not None or bool(checkpoint_dir)
-                     or checkpoint_every > 0 or resume)
-    if compact or needs_runtime:
-        # bucketed compact path: CompactTrainer stages each view into a
-        # small fixed menu of padded shapes (compiled once per bucket)
-        from repro.core.trainer import CompactTrainer
-        trainer = CompactTrainer(model, g, opt, params=params,
-                                 gcn_norm=gcn_norm,
-                                 fault_policy=fault_policy)
-        gbv = global_batch_view(g, cfg.num_layers)
-        mask = test_mask.astype(np.float32)
-        t0 = time.perf_counter()
-        out = trainer.fit(views, steps=steps, eval_every=eval_every,
-                          eval_view=gbv, eval_mask=mask,
-                          prefetch_workers=prefetch_workers,
-                          checkpoint_every=checkpoint_every,
-                          checkpoint_dir=checkpoint_dir, resume=resume,
-                          log_every=1, log=log.info)
-        wall = time.perf_counter() - t0
-        trainer.assert_compiled_per_bucket()
-        history = [{"step": e["step"], "loss": e["loss"],
-                    "test_acc": e["eval_acc"]} for e in out["evals"]]
-        if history and history[-1]["step"] == steps:
-            final_acc = history[-1]["test_acc"]
-        else:
-            final_acc = trainer.evaluate(gbv, mask)
-            history.append({"step": steps, "loss": out["losses"][-1],
-                            "test_acc": final_acc})
-        return {"history": history, "wall_s": wall,
-                "params": trainer.params, "final_acc": final_acc,
-                "model": model, "graph": g}
-
-    opt_state = opt.init(params)
-
-    @jax.jit
-    def local_step(params, opt_state, block):
-        loss_v, grads = jax.value_and_grad(
-            lambda p: loss_block(model, p, block))(params)
-        params, opt_state = opt.update(grads, opt_state, params)
-        return params, opt_state, loss_v
-
-    history = []
-    t0 = time.perf_counter()
-    for step in range(steps):
-        view = next(views)
-        block = view.as_block(gcn_norm=gcn_norm,
-                              csc_plan=cfg.aggregate_backend == "csc")
-        params, opt_state, loss_v = local_step(params, opt_state, block)
-        loss = float(loss_v)
-        if step % eval_every == 0 or step == steps - 1:
-            gb = global_batch_view(g, cfg.num_layers).as_block(
-                gcn_norm=gcn_norm,
-                csc_plan=cfg.aggregate_backend == "csc")
-            acc = float(accuracy_block(model, params, gb,
-                                       mask=test_mask.astype(np.float32)))
-            history.append({"step": step, "loss": loss, "test_acc": acc})
-            log.info("step=%d strategy=%s loss=%.4f test_acc=%.4f",
-                     step, strategy, loss, acc)
-    wall = time.perf_counter() - t0
-    return {"history": history, "wall_s": wall, "params": params,
-            "final_acc": history[-1]["test_acc"], "model": model,
-            "graph": g}
+    """Deprecated shim — construct a :class:`repro.api.TrainJob` and call
+    :func:`repro.api.train` instead (same knobs, one typed surface; see
+    the README migration table). Kept for the legacy kwargs + return
+    dict; single-process runs now always go through the bucketed
+    :class:`~repro.core.trainer.CompactTrainer` (dense views stage as
+    one full-graph bucket, so the math is unchanged)."""
+    import repro.api as api
+    job = api.TrainJob(
+        dataset=dataset, model=model_name, strategy=strategy, steps=steps,
+        hidden=hidden, lr=lr, seed=seed, num_layers=num_layers,
+        eval_every=eval_every, engine_partitions=use_engine or 0,
+        partition_method=partition_method,
+        prefetch_workers=prefetch_workers, compact=compact,
+        fault_policy=fault_policy, checkpoint_dir=checkpoint_dir,
+        checkpoint_every=checkpoint_every, resume=resume)
+    return api.train(job, log=log.info).as_dict()
 
 
 # ---------------------------------------------------------------------------

@@ -116,13 +116,17 @@ def attention_apply(p, x, *, num_heads, num_kv_heads, head_dim,
                     positions=None, rope_theta=10000.0, qk_norm=False,
                     norm_eps=1e-5, causal=True, sliding_window=0,
                     cache=None, cache_index=None, kv_x=None, kv_positions=None,
-                    mrope_positions=None):
+                    mrope_positions=None, valid=None):
     """Unified GQA attention.
 
     - train/prefill: ``cache is None`` — self attention over x.
     - decode: ``cache`` = {"k","v"} (B, S_max, Hkv, hd); new kv written at
       ``cache_index`` (scalar int array); returns (out, new_cache).
     - cross attention: ``kv_x`` given (encoder memory) — no cache, no rope.
+    - ``valid``: (B, P) bool — which of the first P cache slots hold real
+      (non-pad) tokens. Prefill passes the prompt's pad mask (P = Sq);
+      decode keeps passing it so the pad K/Vs that persist in the cache
+      stay masked out of every later step's attention.
     """
     B, Sq, _ = x.shape
     G = num_heads // num_kv_heads
@@ -161,8 +165,10 @@ def attention_apply(p, x, *, num_heads, num_kv_heads, head_dim,
             # (causal + window), then store only the last W entries.
             q_pos = (idx + jnp.arange(Sq, dtype=jnp.int32))[None, :]
             bias = make_attention_bias(q_pos, q_pos, causal=True,
-                                       sliding_window=sliding_window)
-            bias = jnp.broadcast_to(bias, (B, 1) + bias.shape[-2:])
+                                       sliding_window=sliding_window,
+                                       k_valid=(None if valid is None
+                                                else valid.astype(bool)))
+            bias = bias[:, None] if bias.ndim == 3 else bias
             out = _sdpa(q, k, v, bias)
             out = out.reshape(B, Sq, num_heads * head_dim).astype(x.dtype)
             out = out @ p["wo"]
@@ -187,10 +193,22 @@ def attention_apply(p, x, *, num_heads, num_kv_heads, head_dim,
         k, v = ck, cv
         q_pos = (idx + jnp.arange(Sq, dtype=jnp.int32))[None, :]
         k_pos = cpos[None, :]
+        k_valid = (cpos >= 0)[None, :]
+        if valid is not None:
+            # map each slot's stored position back to the prompt's pad
+            # mask; generated positions (>= P) are always real
+            P = valid.shape[1]
+            in_prompt = (cpos >= 0) & (cpos < P)
+            slot_ok = jnp.where(
+                in_prompt[None, :],
+                jnp.take(valid.astype(bool), jnp.clip(cpos, 0, P - 1),
+                         axis=1),
+                True)
+            k_valid = k_valid & slot_ok
         bias = make_attention_bias(q_pos, k_pos, causal=True,
                                    sliding_window=sliding_window,
-                                   k_valid=(cpos >= 0)[None, :])
-        bias = jnp.broadcast_to(bias, (B, 1) + bias.shape[-2:])
+                                   k_valid=k_valid)
+        bias = bias[:, None] if bias.ndim == 3 else bias
     elif cache is not None:
         # write the new kv at cache_index, attend over the whole cache
         idx = cache_index
@@ -204,10 +222,17 @@ def attention_apply(p, x, *, num_heads, num_kv_heads, head_dim,
         k_pos = jnp.arange(S_max, dtype=jnp.int32)[None, :]
         q_pos = (idx + jnp.arange(Sq, dtype=jnp.int32))[None, :]
         k_valid = (k_pos <= (idx + Sq - 1))
+        if valid is not None:
+            # left-pad slots written at prefill stay in the cache; mask
+            # them out of this and every later step's attention
+            P = valid.shape[1]
+            vfull = jnp.ones((B, S_max), bool)
+            vfull = vfull.at[:, :P].set(valid.astype(bool))
+            k_valid = k_valid & vfull
         bias = make_attention_bias(q_pos, k_pos, causal=True,
                                    sliding_window=sliding_window,
                                    k_valid=k_valid)
-        bias = jnp.broadcast_to(bias, (B, 1) + bias.shape[-2:])
+        bias = bias[:, None] if bias.ndim == 3 else bias
     elif is_cross:
         bias = jnp.zeros((B, 1, Sq, Sk_new), jnp.float32)
     else:
@@ -270,7 +295,7 @@ def _mla_qkv(p, x, num_heads, mla, positions, rope_theta, norm_eps):
 
 
 def mla_apply(p, x, *, num_heads, mla, positions=None, rope_theta=10000.0,
-              norm_eps=1e-5, cache=None, cache_index=None):
+              norm_eps=1e-5, cache=None, cache_index=None, valid=None):
     """MLA attention.
 
     prefill/train: decompress K/V per head, standard causal attention.
@@ -324,8 +349,16 @@ def mla_apply(p, x, *, num_heads, mla, positions=None, rope_theta=10000.0,
     k_pos = jnp.arange(S_max, dtype=jnp.int32)[None, :]
     q_pos = (idx + jnp.arange(Sq, dtype=jnp.int32))[None, :]
     k_valid = k_pos <= (idx + Sq - 1)
+    if valid is not None:
+        # same pad-slot masking as the GQA cache path
+        P = valid.shape[1]
+        vfull = jnp.ones((B, S_max), bool)
+        vfull = vfull.at[:, :P].set(valid.astype(bool))
+        k_valid = k_valid & vfull
     bias = make_attention_bias(q_pos, k_pos, causal=True, k_valid=k_valid)
-    probs = jax.nn.softmax(scores + bias[:, None], axis=-1)
+    if bias.ndim == 3:
+        bias = bias[:, None]
+    probs = jax.nn.softmax(scores + bias, axis=-1)
     o_lat = jnp.einsum("bhqk,bkr->bqhr", probs, cc.astype(jnp.float32))
     wv_b = p["wv_b"].reshape(mla.kv_lora_rank, num_heads, mla.v_head_dim)
     out = jnp.einsum("bqhr,rhd->bqhd", o_lat, wv_b.astype(jnp.float32))

@@ -1,0 +1,15 @@
+"""Online GNN inference serving (paper §5 — the production story).
+
+The training side of this repo reproduces GraphTheta's flexible training
+strategies; this package serves the trained model: a
+:class:`~repro.serving.server.GNNServer` micro-batches incoming node-id
+requests into size-bucketed compact views (the PR 6 machinery), runs a
+compiled-once-per-bucket jitted infer step, and — the production latency
+trick — keeps a host-side :class:`~repro.serving.cache.EmbeddingCache`
+of historical layer-(K-1) embeddings so a cache-hit request recomputes
+only its 1-hop top layer instead of the full K-hop cascade.
+"""
+from repro.serving.cache import EmbeddingCache
+from repro.serving.server import GNNServer, ServeStats
+
+__all__ = ["EmbeddingCache", "GNNServer", "ServeStats"]

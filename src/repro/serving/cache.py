@@ -1,0 +1,126 @@
+"""Historical-embedding cache for online GNN inference.
+
+The serving latency trick from the sampling literature (see PAPERS.md,
+"Scalable Graph Neural Network Training: The Case for Sampling"): keep
+the layer-(K-1) hidden embeddings computed by previous requests in a
+host-side table. A later request whose 1-hop ego-net is fully covered by
+*fresh* cached rows skips the K-hop cascade entirely — it builds a
+1-hop compact view, feeds the cached rows in as features, and runs only
+the model's top layer plus the decoder.
+
+Freshness is version-based: every entry records the global ``version``
+it was written at, and a read is fresh iff ``version - entry_version <=
+staleness``. ``advance()`` bumps the global version (call it when the
+served params change — e.g. after an online fine-tune step), so
+``staleness=0`` means "only embeddings computed under the current
+params ever hit", which makes cache-hit outputs **bit-exact** with the
+full recompute (the cached rows came out of the very same jitted
+computation). ``invalidate(nodes)`` drops entries outright on feature
+updates — a node whose raw features changed has a wrong cached
+embedding at *any* version.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.graph.csr import Graph
+
+
+class EmbeddingCache:
+    """Host-side table of historical layer-(K-1) node embeddings.
+
+    ``table`` is an ``(N, dim)`` float32 array updated in place (so a
+    :class:`~repro.core.views.CompactBlockBuilder` holding it as its
+    feature source always gathers current rows); ``entry_version[v]`` is
+    the global version node v's row was written at, ``-1`` = never
+    written. ``hits``/``misses`` count per-target admission decisions.
+    """
+
+    def __init__(self, g: Graph, dim: int, staleness: int = 0):
+        if int(dim) <= 0:
+            raise ValueError(f"EmbeddingCache dim must be positive, "
+                             f"got {dim}")
+        self.g = g
+        self.dim = int(dim)
+        self.staleness = int(staleness)
+        self.table = np.zeros((g.num_nodes, self.dim), np.float32)
+        self.entry_version = np.full(g.num_nodes, -1, np.int64)
+        self.version = 0
+        self.hits = 0
+        self.misses = 0
+
+    # -- writes ----------------------------------------------------------------
+
+    def put(self, nodes: np.ndarray, values: np.ndarray) -> None:
+        """Write embeddings for ``nodes`` at the current version."""
+        nodes = np.asarray(nodes)
+        values = np.asarray(values, np.float32)
+        if values.shape != (len(nodes), self.dim):
+            raise ValueError(
+                f"EmbeddingCache.put: values shape {values.shape} != "
+                f"({len(nodes)}, {self.dim})")
+        self.table[nodes] = values
+        self.entry_version[nodes] = self.version
+
+    def advance(self) -> int:
+        """Bump the global version (served params changed). Existing
+        entries age by one; with ``staleness=0`` they all stop hitting
+        until rewritten."""
+        self.version += 1
+        return self.version
+
+    def invalidate(self, nodes: Optional[np.ndarray] = None) -> None:
+        """Drop entries for ``nodes`` (all nodes if None) — the feature
+        -update path: stale *inputs* can't be aged back in by any
+        staleness bound."""
+        if nodes is None:
+            self.entry_version.fill(-1)
+        else:
+            self.entry_version[np.asarray(nodes)] = -1
+
+    # -- reads -----------------------------------------------------------------
+
+    def fresh(self, nodes: np.ndarray) -> np.ndarray:
+        """Bool mask: which of ``nodes`` have a usable entry."""
+        ver = self.entry_version[np.asarray(nodes)]
+        return (ver >= 0) & ((self.version - ver) <= self.staleness)
+
+    def coverage(self, targets: np.ndarray) -> np.ndarray:
+        """Bool mask over ``targets``: target t is *covered* (can be
+        served from cache) iff t and every in-neighbor of t are fresh —
+        exactly the rows the top GNN layer reads on a 1-hop view.
+        Vectorized over the CSC segments of the whole batch."""
+        targets = np.asarray(targets)
+        if len(targets) == 0:
+            return np.zeros(0, bool)
+        indptr, order = self.g.csc()
+        starts, stops = indptr[targets], indptr[targets + 1]
+        counts = (stops - starts).astype(np.int64)
+        covered = self.fresh(targets)
+        total = int(counts.sum())
+        if total == 0:
+            return covered
+        # gather every target's in-edge ids in one flat sweep
+        flat = np.repeat(starts, counts) + (
+            np.arange(total) - np.repeat(np.cumsum(counts) - counts,
+                                         counts))
+        srcs = self.g.src[order[flat]]
+        stale = ~self.fresh(srcs)
+        # per-target stale count via segment sums (reduceat needs
+        # non-empty segments; empty ones contribute zero by construction)
+        seg = np.zeros(len(targets), np.int64)
+        nz = counts > 0
+        if nz.any():
+            bounds = (np.cumsum(counts) - counts)[nz]
+            seg[nz] = np.add.reduceat(stale.astype(np.int64), bounds)
+        return covered & (seg == 0)
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {"hits": int(self.hits), "misses": int(self.misses),
+                "hit_rate": (self.hits / total) if total else 0.0,
+                "version": int(self.version),
+                "entries": int((self.entry_version >= 0).sum()),
+                "staleness": self.staleness}

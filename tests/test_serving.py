@@ -1,0 +1,173 @@
+"""Online GNN serving: cache parity, bucket contract, concurrency, facade.
+
+The load-bearing claim is the first test: at ``staleness=0`` the
+historical-embedding fast path is **bit-exact** with the full K-hop
+recompute (hop ordering makes the cached rows the true full-graph
+h^{K-1}, and the 1-hop view aggregates the same edges in the same CSC
+order). Everything else — stale drift bounds, compiled-once-per-bucket,
+client-count invariance, the train -> checkpoint -> serve round trip —
+leans on that.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+import repro.api as api
+
+
+@pytest.fixture(scope="module")
+def trained():
+    return api.train(api.TrainJob(dataset="cora", steps=30, hidden=32,
+                                  eval_every=29))
+
+
+def _server(trained, **kw):
+    kw.setdefault("max_batch", 8)
+    return api.serve(trained, api.ServeConfig(**kw))
+
+
+def test_cache_hit_bitexact_vs_full_recompute(trained):
+    rng = np.random.default_rng(0)
+    targets = rng.choice(trained.graph.num_nodes, 12, replace=False)
+    cached = _server(trained)
+    plain = _server(trained, cache=False)
+    first = cached.submit(targets)          # all misses; warms the cache
+    again = cached.submit(targets)          # covered targets now hit
+    assert cached.cache.stats()["hits"] > 0
+    np.testing.assert_array_equal(first, again)
+    np.testing.assert_array_equal(first, plain.submit(targets))
+    # and both match the offline oracle
+    np.testing.assert_array_equal(first, api.infer(trained, targets))
+
+
+def test_stale_cache_bounded_drift(trained):
+    rng = np.random.default_rng(1)
+    targets = rng.choice(trained.graph.num_nodes, 12, replace=False)
+    srv = _server(trained, staleness=1)
+    srv.submit(targets)                     # cache under the old params
+    # a small online update to the *bottom* layer (so the true h^{K-1}
+    # moves): staleness=1 keeps serving the pre-update embeddings
+    # through the new top layer
+    layers = list(trained.params["layers"])
+    layers[0] = jax.tree_util.tree_map(lambda a: a + 1e-3, layers[0])
+    bumped = {**trained.params, "layers": layers}
+    srv.update_params(bumped)
+    h0 = srv.cache.stats()["hits"]
+    served = srv.submit(targets)
+    assert srv.cache.stats()["hits"] > h0   # stale entries still admit
+    oracle = _server(trained, cache=False)
+    oracle.update_params(bumped)
+    exact = oracle.submit(targets)
+    drift = np.abs(served - exact).max()
+    assert 0 < drift < 0.1, drift           # bounded by the perturbation
+    # staleness=0 rejects the aged entries and recovers exactness
+    strict = _server(trained)
+    strict.submit(targets)
+    strict.update_params(bumped)
+    h0 = strict.cache.stats()["hits"]
+    np.testing.assert_array_equal(strict.submit(targets), exact)
+    assert strict.cache.stats()["hits"] == h0
+
+
+def test_compiled_once_per_bucket_over_mixed_trace(trained):
+    srv = _server(trained)
+    rng = np.random.default_rng(2)
+    n = trained.graph.num_nodes
+    for size in (1, 3, 7, 2, 8, 1, 5, 8, 3):    # mixed batch sizes
+        srv.submit(rng.integers(0, n, size))
+    srv.assert_compiled_per_bucket()
+    tr = srv.server_stats()["trace"]
+    assert tr["full"]["traces"] == len(tr["full"]["buckets"])
+    if tr["hit"]["traces"]:
+        assert tr["hit"]["traces"] == len(tr["hit"]["buckets"])
+
+
+def test_feature_update_invalidates_dependents(trained):
+    rng = np.random.default_rng(3)
+    g = trained.graph
+    targets = rng.choice(g.num_nodes, 10, replace=False)
+    srv = _server(trained)
+    srv.submit(targets)
+    node = int(targets[0])
+    srv.update_features(np.array([node]),
+                        g.node_features[node] + 0.5)
+    served = srv.submit(targets)
+    # oracle over the *updated* graph — fresh full recompute
+    oracle = _server(trained, cache=False)
+    np.testing.assert_array_equal(served, oracle.submit(targets))
+    srv.assert_compiled_per_bucket()
+
+
+def test_concurrent_clients_deterministic(trained):
+    from repro.launch.serve_gnn import request_trace, run_clients
+    trace = request_trace(trained.graph, 60, seed=4)
+
+    def serve_with(clients):
+        srv = _server(trained, max_batch=4, max_wait_ms=1.0).start()
+        try:
+            out, _ = run_clients(srv, trace, clients)
+        finally:
+            srv.stop()
+        srv.assert_compiled_per_bucket()
+        return out
+
+    np.testing.assert_array_equal(serve_with(1), serve_with(4))
+
+
+def test_request_requires_start_and_submit_validates(trained):
+    srv = _server(trained)
+    with pytest.raises(RuntimeError):
+        srv.request(0)
+    with pytest.raises(ValueError):
+        srv.submit([])
+    with pytest.raises(ValueError):
+        srv.submit([trained.graph.num_nodes])
+
+
+def test_facade_train_checkpoint_serve_roundtrip(tmp_path):
+    ckdir = str(tmp_path / "ck")
+    result = api.train(api.TrainJob(dataset="cora", steps=10, hidden=32,
+                                    eval_every=9, checkpoint_dir=ckdir,
+                                    checkpoint_every=5))
+    srv = api.serve(result, api.ServeConfig(checkpoint_dir=ckdir,
+                                            max_batch=8))
+    nodes = np.arange(8)
+    np.testing.assert_array_equal(srv.submit(nodes),
+                                  api.infer(result, nodes))
+
+
+def test_k1_model_has_no_cache(trained):
+    job = api.TrainJob(dataset="cora", steps=2, hidden=16, num_layers=1,
+                       eval_every=2)
+    r = api.train(job)
+    srv = api.serve(r)
+    assert srv.cache is None
+    out = srv.submit(np.arange(5))
+    assert out.shape == (5, int(r.graph.labels.max()) + 1)
+    srv.assert_compiled_per_bucket()
+
+
+def test_queue_batches_concurrent_requests(trained):
+    srv = _server(trained, max_batch=16, max_wait_ms=20.0).start()
+    try:
+        outs = {}
+
+        def client(i):
+            outs[i] = srv.request(i % trained.graph.num_nodes)
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    finally:
+        srv.stop()
+    s = srv.server_stats()
+    assert s["requests"] == 8
+    assert s["batches"] < 8                 # the deadline coalesced them
+    for i, out in outs.items():
+        np.testing.assert_array_equal(
+            out, api.infer(trained, [i % trained.graph.num_nodes])[0])

@@ -36,6 +36,29 @@ def test_rolling_prefill_matches_full_cache_decode():
     assert err < 2e-3, err
 
 
+def test_batched_mixed_length_prompts_match_solo():
+    """BatchServer pad-invariance: left-padded mixed-length prompts in
+    one lockstep batch generate exactly what each request generates solo
+    (the validity mask keeps pad K/Vs out of causal attention, per-row
+    positions keep RoPE aligned)."""
+    from repro.launch.serve import BatchServer, Request
+
+    rng = np.random.default_rng(0)
+    srv = BatchServer("qwen3-4b", batch_size=3, cache_len=24,
+                      reduced=True, rolling=False)
+    V = srv.cfg.vocab_size
+    prompts = [rng.integers(0, V, n).astype(np.int32) for n in (4, 9, 6)]
+    reqs = [Request(i, p, 4) for i, p in enumerate(prompts)]
+    srv.run(reqs)
+    for i, p in enumerate(prompts):
+        solo = BatchServer("qwen3-4b", batch_size=1, cache_len=24,
+                           reduced=True, rolling=False)
+        solo.params = srv.params       # same weights, no pad
+        r = Request(0, p, 4)
+        solo.run([r])
+        assert r.out == reqs[i].out, (i, r.out, reqs[i].out)
+
+
 def test_jamba_moe_interleave():
     """jamba: MoE on every 2nd layer only; param structure reflects it."""
     cfg = get_arch_config("jamba-1.5-large-398b")
