@@ -27,6 +27,13 @@ repro.analysis`` gate):
     count it, log it, or re-raise). Deliberate best-effort cleanup
     paths carry a waiver comment explaining why discarding is correct.
 
+``src.unjoined-process``
+    A module that calls ``Process(...).start()`` without any
+    ``.join()``/``.terminate()``/``.kill()`` call anywhere in the file
+    has no supervised shutdown path — on error the child is orphaned
+    (and under spawn it pins shared-memory segments). Fire-and-forget
+    helpers that genuinely cannot leak carry a waiver.
+
 Waiving a finding: append ``# lint: waive=<rule-id>`` to the flagged
 line (comma-separate several ids; ``all`` waives every rule). Waivers
 are for documented one-off fallback paths — e.g. the scratch-buffer
@@ -130,6 +137,10 @@ class _Linter(ast.NodeVisitor):
         self.stack: List[str] = []          # qualname parts
         self.size_names: List[Set[str]] = []   # per enclosing hot fn
         self.findings: List[Finding] = []
+        # src.unjoined-process bookkeeping (file-level: Process(...)
+        # call sites vs. whether ANY join/terminate/kill path exists)
+        self.process_calls: List[int] = []
+        self.has_reaper = False
 
     # -- helpers ----------------------------------------------------------
 
@@ -205,6 +216,14 @@ class _Linter(ast.NodeVisitor):
         self.generic_visit(node)
 
     def visit_Call(self, node: ast.Call):
+        fn = node.func
+        if ((isinstance(fn, ast.Name) and fn.id == "Process")
+                or (isinstance(fn, ast.Attribute)
+                    and fn.attr == "Process")):
+            self.process_calls.append(node.lineno)
+        elif (isinstance(fn, ast.Attribute)
+                and fn.attr in ("join", "terminate", "kill")):
+            self.has_reaper = True
         if self._in_hot_function():
             name = _np_call_name(node)
             if name in MEMBERSHIP_SCANS:
@@ -231,6 +250,15 @@ def lint_source(source: str, rel: str,
     tree = ast.parse(source)
     linter = _Linter(rel, _waivers(source), hot)
     linter.visit(tree)
+    if not linter.has_reaper:
+        for lineno in linter.process_calls:
+            linter._emit(
+                "src.unjoined-process", lineno,
+                "Process(...) spawned in a file with no join()/"
+                "terminate()/kill() anywhere — no supervised shutdown "
+                "path; children orphan on error (add a close() that "
+                "joins with escalation, or waive if the process cannot "
+                "outlive its work)")
     return linter.findings
 
 

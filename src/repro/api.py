@@ -62,6 +62,7 @@ class TrainJob:
     engine_partitions: int = 0         # 0 = single-process bucketed path
     partition_method: str = "1d_src"
     prefetch_workers: Optional[int] = None
+    prefetch_mode: str = "thread"      # thread | process (sampler procs)
     # fault tolerance / checkpointing (repro.runtime)
     fault_policy: Optional[Any] = None
     checkpoint_dir: Optional[str] = None
@@ -75,6 +76,7 @@ class ServeConfig:
     """Knobs of the online inference server (:mod:`repro.serving`)."""
     max_batch: int = 32
     max_wait_ms: float = 2.0
+    max_queue: Optional[int] = None    # bounded admission (None = 8*batch)
     cache: bool = True                 # historical-embedding cache
     staleness: int = 0                 # max version age for a cache hit
     buckets: Optional[Any] = None      # BucketSpec (None = graph ladder)
@@ -193,17 +195,30 @@ def train(job: TrainJob, log=None) -> TrainResult:
     """Run the job end to end: build graph/model/views, fit the right
     trainer, certify its trace contract, evaluate. Deterministic in
     ``job.seed`` (prefetch parallelism never changes the trajectory)."""
+    from repro.runtime.faults import TrainingInterrupted
     from repro.utils import get_logger
     log = log or get_logger("api").info
     trainer, views, eval_view, eval_mask, g, model = make_trainer(job)
     t0 = time.perf_counter()
-    out = trainer.fit(views, steps=job.steps, eval_every=job.eval_every,
-                      eval_view=eval_view, eval_mask=eval_mask,
-                      prefetch_workers=job.prefetch_workers,
-                      checkpoint_every=job.checkpoint_every,
-                      checkpoint_dir=job.checkpoint_dir,
-                      resume=job.resume,
-                      log_every=job.log_every, log=log)
+    try:
+        out = trainer.fit(views, steps=job.steps,
+                          eval_every=job.eval_every,
+                          eval_view=eval_view, eval_mask=eval_mask,
+                          prefetch_workers=job.prefetch_workers,
+                          prefetch_mode=job.prefetch_mode,
+                          checkpoint_every=job.checkpoint_every,
+                          checkpoint_dir=job.checkpoint_dir,
+                          resume=job.resume,
+                          log_every=job.log_every, log=log)
+    except TrainingInterrupted:
+        # a signal handler fired mid-fit: fit's finally already drained
+        # the prefetch service (no orphaned sampler processes); persist
+        # the progress so --resume can pick the run back up
+        if job.checkpoint_dir:
+            trainer.save(job.checkpoint_dir)
+            log(f"interrupted at step {trainer.step_num} — checkpoint "
+                f"saved to {job.checkpoint_dir}")
+        raise
     wall = time.perf_counter() - t0
     trainer.assert_trace_contract()
     history = [{"step": e["step"], "loss": e["loss"],
@@ -261,6 +276,7 @@ def serve(result: TrainResult,
                      staleness=config.staleness,
                      max_batch=config.max_batch,
                      max_wait_ms=config.max_wait_ms,
+                     max_queue=config.max_queue,
                      gcn_norm=result.gcn_norm, slots=config.slots)
 
 

@@ -72,6 +72,9 @@ from repro.core.views import CompactBlockBuilder, ViewStream
 from repro.runtime.faults import (DivergenceError, FaultInjector,
                                   FaultPolicy, Retrier, sync_with_timeout)
 from repro.runtime.prefetch import StreamPrefetcher, ViewPrefetcher
+from repro.runtime.procpool import (ProcessViewService,
+                                    ProcPoolUnavailable,
+                                    warn_unavailable_once)
 
 # the pipelines moved to repro.runtime.prefetch (where supervision
 # lives); these aliases keep the long-standing private import paths of
@@ -254,6 +257,7 @@ class BaseTrainer:
 
     def fit(self, views, steps: Optional[int] = None,
             prefetch: bool = True, prefetch_workers: Optional[int] = None,
+            prefetch_mode: str = "thread",
             eval_every: int = 0, eval_view=None,
             eval_mask: Optional[np.ndarray] = None,
             checkpoint_every: int = 0,
@@ -289,6 +293,18 @@ class BaseTrainer:
         oversubscribe the box the step runs on. Plain iterators use the
         single-thread double-buffered pipeline.
 
+        ``prefetch_mode`` picks the pool implementation for stream
+        views: ``"thread"`` (default) is the in-process
+        :class:`~repro.runtime.prefetch.StreamPrefetcher`;
+        ``"process"`` fans view construction out to supervised sampler
+        *processes* over shared-memory slots
+        (:class:`~repro.runtime.procpool.ProcessViewService`) —
+        GIL-free builds, same bit-identical trajectory. When shared
+        memory is unavailable the process mode degrades to threads with
+        a one-time warning; plain (non-stream) iterators always use the
+        in-process pipeline (their builds are not pure in an index, so
+        they cannot be farmed out).
+
         ``max_in_flight`` bounds the async-dispatch run-ahead: before
         dispatching step *i* the loop blocks on step *i - max_in_flight*,
         so at most that many steps' view/activation buffers are live at
@@ -317,6 +333,10 @@ class BaseTrainer:
         # own build+prepare internally)
         prep = prepare if rt is None else (
             lambda v: rt("view_build", lambda: prepare(v)))
+        if prefetch_mode not in ("thread", "process"):
+            raise ValueError(
+                f"prefetch_mode={prefetch_mode!r} — expected 'thread' "
+                "or 'process'")
         if stream is not None:
             # indexable stream: the worker pool path (workers=1 is the
             # double-buffered pipeline with exact cursor accounting)
@@ -324,9 +344,19 @@ class BaseTrainer:
                 if prefetch_workers is None:
                     prefetch_workers = max(
                         1, min(4, (os.cpu_count() or 2) - 1))
-                staged_iter = _MultiStreamPrefetcher(
-                    stream, prepare, steps, workers=prefetch_workers,
-                    depth=self.prefetch_depth, runtime=rt)
+                staged_iter = None
+                if prefetch_mode == "process":
+                    try:
+                        staged_iter = ProcessViewService(
+                            stream, prepare, steps,
+                            workers=prefetch_workers,
+                            depth=self.prefetch_depth, runtime=rt)
+                    except ProcPoolUnavailable as e:
+                        warn_unavailable_once(str(e))
+                if staged_iter is None:
+                    staged_iter = _MultiStreamPrefetcher(
+                        stream, prepare, steps, workers=prefetch_workers,
+                        depth=self.prefetch_depth, runtime=rt)
             else:
                 bounded = (itertools.islice(stream, steps)
                            if steps is not None else stream)
@@ -405,8 +435,13 @@ class BaseTrainer:
                     self.save(checkpoint_dir)
         finally:
             if isinstance(staged_iter,
-                          (_ViewPrefetcher, _MultiStreamPrefetcher)):
+                          (_ViewPrefetcher, _MultiStreamPrefetcher,
+                           ProcessViewService)):
                 staged_iter.close()
+            if isinstance(staged_iter, ProcessViewService) and rt is None:
+                # with a runtime the service already appended its
+                # supervision events into rt.events
+                events.extend(staged_iter.events)
         losses.extend(float(l) for l in pending)
         self.history.extend(evals)
         return {"losses": losses, "evals": evals, "steps": self.step_num,

@@ -38,6 +38,7 @@ def train_gnn(dataset: str, model_name: str, strategy: str, steps: int,
               use_engine: Optional[int] = None,
               partition_method: str = "1d_src",
               prefetch_workers: Optional[int] = None,
+              prefetch_mode: str = "thread",
               compact: bool = False, fault_policy=None,
               checkpoint_dir: Optional[str] = None,
               checkpoint_every: int = 0, resume: bool = False) -> dict:
@@ -53,7 +54,8 @@ def train_gnn(dataset: str, model_name: str, strategy: str, steps: int,
         hidden=hidden, lr=lr, seed=seed, num_layers=num_layers,
         eval_every=eval_every, engine_partitions=use_engine or 0,
         partition_method=partition_method,
-        prefetch_workers=prefetch_workers, compact=compact,
+        prefetch_workers=prefetch_workers, prefetch_mode=prefetch_mode,
+        compact=compact,
         fault_policy=fault_policy, checkpoint_dir=checkpoint_dir,
         checkpoint_every=checkpoint_every, resume=resume)
     return api.train(job, log=log.info).as_dict()
@@ -145,6 +147,13 @@ def main(argv=None):
                    help="view-builder threads for the engine path "
                         "(default: min(4, cores-1); deterministic for "
                         "any count)")
+    g.add_argument("--prefetch-mode", default="thread",
+                   choices=["thread", "process"],
+                   help="view construction pool: in-process threads "
+                        "(default) or supervised sampler processes over "
+                        "shared memory (GIL-free builds, bit-identical "
+                        "trajectory; degrades to threads with a warning "
+                        "where shared memory is unavailable)")
     g.add_argument("--compact", action="store_true",
                    help="compact sampled-subgraph views (relabeled "
                         "local-id blocks, size-bucketed padding) for "
@@ -221,15 +230,41 @@ def main(argv=None):
             if args.step_timeout is not None:
                 kw["timeouts"] = {"step": args.step_timeout}
             fault_policy = FaultPolicy(**kw)
-        out = train_gnn(args.dataset, args.model, args.strategy, args.steps,
-                        hidden=args.hidden, num_layers=args.layers,
-                        use_engine=args.engine_partitions or None,
-                        partition_method=args.partition_method,
-                        prefetch_workers=args.prefetch_workers,
-                        compact=args.compact, fault_policy=fault_policy,
-                        checkpoint_dir=args.checkpoint_dir,
-                        checkpoint_every=args.checkpoint_every,
-                        resume=args.resume)
+        # SIGINT/SIGTERM during fit: raise in the main thread so fit's
+        # finally drains the prefetch service (no orphaned sampler
+        # processes), api.train saves a final checkpoint, and the CLI
+        # exits nonzero (128 + signum, the shell convention)
+        import signal
+        from repro.runtime.faults import TrainingInterrupted
+
+        def _interrupt(signum, frame):
+            raise TrainingInterrupted(signum)
+
+        previous = {s: signal.signal(s, _interrupt)
+                    for s in (signal.SIGINT, signal.SIGTERM)}
+        try:
+            out = train_gnn(args.dataset, args.model, args.strategy,
+                            args.steps,
+                            hidden=args.hidden, num_layers=args.layers,
+                            use_engine=args.engine_partitions or None,
+                            partition_method=args.partition_method,
+                            prefetch_workers=args.prefetch_workers,
+                            prefetch_mode=args.prefetch_mode,
+                            compact=args.compact,
+                            fault_policy=fault_policy,
+                            checkpoint_dir=args.checkpoint_dir,
+                            checkpoint_every=args.checkpoint_every,
+                            resume=args.resume)
+        except TrainingInterrupted as e:
+            where = (f"checkpoint saved to {args.checkpoint_dir}"
+                     if args.checkpoint_dir else "no --checkpoint-dir, "
+                     "progress discarded")
+            print(f"interrupted by signal {e.signum} — {where}",
+                  file=sys.stderr)
+            return 128 + e.signum
+        finally:
+            for s, h in previous.items():
+                signal.signal(s, h)
         print(f"final test acc: {out['final_acc']:.4f} "
               f"({out['wall_s']:.1f}s)")
     else:

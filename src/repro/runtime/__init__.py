@@ -3,20 +3,28 @@
 The layer between the trainers and everything that can fail — view
 construction, device staging, step execution, checkpoint I/O. See
 :mod:`repro.runtime.faults` (policy / injection / retry),
-:mod:`repro.runtime.prefetch` (supervised prefetch pipelines), and
-``python -m repro.runtime.chaos`` (the chaos harness CI runs).
+:mod:`repro.runtime.prefetch` (supervised in-process prefetch),
+:mod:`repro.runtime.procpool` (supervised sampler *processes* over
+shared-memory view slots), and ``python -m repro.runtime.chaos`` (the
+chaos harness CI runs).
 """
 from repro.runtime.faults import (DivergenceError, FaultInjector,
                                   FaultPolicy, FaultRetriesExceeded,
                                   InjectedFault, PrefetchShutdownError,
-                                  Retrier, StepTimeoutError,
+                                  Retrier, SlotCorruptionError,
+                                  StepTimeoutError, TrainingInterrupted,
                                   TransientError, WorkerKilled,
                                   sync_with_timeout)
 from repro.runtime.prefetch import StreamPrefetcher, ViewPrefetcher
+from repro.runtime.procpool import (ProcessViewService,
+                                    ProcPoolUnavailable,
+                                    shared_memory_available)
 
 __all__ = [
     "DivergenceError", "FaultInjector", "FaultPolicy",
     "FaultRetriesExceeded", "InjectedFault", "PrefetchShutdownError",
-    "Retrier", "StepTimeoutError", "StreamPrefetcher", "TransientError",
-    "ViewPrefetcher", "WorkerKilled", "sync_with_timeout",
+    "ProcessViewService", "ProcPoolUnavailable", "Retrier",
+    "SlotCorruptionError", "StepTimeoutError", "StreamPrefetcher",
+    "TrainingInterrupted", "TransientError", "ViewPrefetcher",
+    "WorkerKilled", "shared_memory_available", "sync_with_timeout",
 ]

@@ -6,11 +6,17 @@ CI runs two lanes:
 
 - ``python -m repro.runtime.chaos --smoke`` (fast lane): one combined
   scenario per trainer — a killed prefetch worker, failed view builds,
-  a failed device staging and a failed checkpoint save, all in one fit.
+  a failed device staging and a failed checkpoint save, all in one fit —
+  plus one process-mode scenario (a sampler process SIGKILLed mid-build
+  under ``prefetch_mode="process"``).
 - ``python -m repro.runtime.chaos`` (nightly): the full sweep over
-  injection point x policy combinations, plus the divergence-recovery
-  scenarios (skip_view / rollback) which change the trajectory by
-  design and are checked for their recovery semantics instead.
+  injection point x policy combinations, the process-fault sweep
+  ({proc_kill, proc_hang, slot_corrupt} x {thread, process} x
+  {engine, compact} — process-mode scenarios also certify thread/
+  process trajectory parity, since the baseline is always thread mode),
+  plus the divergence-recovery scenarios (skip_view / rollback) which
+  change the trajectory by design and are checked for their recovery
+  semantics instead.
 
 Exit code 0 iff every scenario holds. Each scenario also re-certifies
 the compiled-once / compiled-per-bucket contract — recovery must never
@@ -73,18 +79,25 @@ def _views(g, seed=0, compact=False):
                           compact=compact)
 
 
-def _fit(trainer, g, steps, compact=False, workers=2, **kw):
+def _fit(trainer, g, steps, compact=False, workers=2, mode="thread",
+         **kw):
     out = trainer.fit(_views(g, compact=compact), steps=steps,
-                      prefetch_workers=workers, **kw)
+                      prefetch_workers=workers, prefetch_mode=mode, **kw)
     return out
 
 
 def run_scenario(name: str, plan: dict, trainer_kind: str = "engine",
                  policy_kw: dict = None, steps: int = 8,
-                 backend: str = "reference", verbose=print) -> bool:
+                 backend: str = "reference", mode: str = "thread",
+                 hang_seconds: float = 0.5, verbose=print) -> bool:
     """One chaos scenario: baseline vs injected run, bit-identical
     trajectory required (plus: the faults actually fired, and the
-    compile contracts held). Returns pass/fail."""
+    compile contracts held). Returns pass/fail.
+
+    The baseline always runs fault-free in thread mode, so a
+    ``mode="process"`` scenario certifies both recovery invariance AND
+    thread/process mode parity in one comparison.
+    """
     g = _graph()
     compact = trainer_kind == "compact"
     make = _compact_trainer if compact else _engine_trainer
@@ -94,11 +107,11 @@ def run_scenario(name: str, plan: dict, trainer_kind: str = "engine",
     ref = _fit(base, g, steps, compact=compact)["losses"]
 
     policy = FaultPolicy(**{**FAST, **(policy_kw or {})})
-    inj = FaultInjector(plan, seed=0, hang_seconds=0.5)
+    inj = FaultInjector(plan, seed=0, hang_seconds=hang_seconds)
     tr = make(g, fault_policy=policy, injector=inj, **mk_kw)
     with tempfile.TemporaryDirectory() as d:
-        out = _fit(tr, g, steps, compact=compact, checkpoint_dir=d,
-                   checkpoint_every=3)
+        out = _fit(tr, g, steps, compact=compact, mode=mode,
+                   checkpoint_dir=d, checkpoint_every=3)
     got = out["losses"]
 
     ok = True
@@ -181,6 +194,22 @@ SWEEP_POLICIES = {
     "finite": {"check_finite": True},
 }
 
+# process-level faults: each point has a thread-mode analog in
+# StreamPrefetcher, so every plan runs under BOTH prefetch modes. The
+# process-mode proc_hang needs a child stall longer than the watchdog
+# (the sleeping child sends no heartbeats; the parent's claim-age
+# watchdog must kill + respawn it, not wait it out), so those scenarios
+# tighten worker_heartbeat_s and stretch hang_seconds.
+PROC_SWEEP_POINTS = ("proc_kill", "proc_hang", "slot_corrupt")
+
+
+def _proc_scenario_kw(point: str, mode: str) -> dict:
+    kw = {"mode": mode}
+    if mode == "process" and point == "proc_hang":
+        kw["hang_seconds"] = 30.0
+        kw["policy_kw"] = {"worker_heartbeat_s": 0.75}
+    return kw
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
@@ -198,6 +227,9 @@ def main(argv=None) -> int:
             "smoke/engine", SMOKE_PLAN, "engine", steps=args.steps))
         results.append(run_scenario(
             "smoke/compact", SMOKE_PLAN, "compact", steps=args.steps))
+        results.append(run_scenario(
+            "smoke/procpool", {"proc_kill": {1}}, "engine",
+            mode="process", steps=args.steps))
         results.append(run_divergence(
             "smoke/rollback", "rollback", "engine", steps=args.steps))
     else:
@@ -207,6 +239,16 @@ def main(argv=None) -> int:
                 results.append(run_scenario(
                     f"{point}/{pname}", {point: occ}, "engine",
                     policy_kw=pkw, steps=args.steps))
+        # process-fault sweep: every process point under both prefetch
+        # modes and both trainers — recovery must be invisible AND the
+        # two modes must emit bit-identical trajectories
+        for point in PROC_SWEEP_POINTS:
+            for mode in ("thread", "process"):
+                for kind in ("engine", "compact"):
+                    results.append(run_scenario(
+                        f"{point}/{mode}/{kind}", {point: {1}}, kind,
+                        steps=args.steps,
+                        **_proc_scenario_kw(point, mode)))
         results.append(run_scenario(
             "combined/engine", SMOKE_PLAN, "engine", steps=args.steps))
         for backend in ("reference", "csc"):

@@ -92,6 +92,25 @@ class PrefetchShutdownError(RuntimeError):
     hung sampler and pins its staged buffers)."""
 
 
+class SlotCorruptionError(TransientError):
+    """A shared-memory view slot failed its crc32/seqlock check — a torn
+    or corrupted cross-process handoff. Transient by design: views are
+    pure in ``(seed, i)``, so the reaction is a bit-exact rebuild."""
+
+
+class TrainingInterrupted(BaseException):
+    """SIGINT/SIGTERM arrived mid-``fit``. Raised by the launch-CLI
+    signal handlers so the fit loop unwinds through its ``finally`` (the
+    prefetcher / process view service drains — no orphaned samplers) and
+    :func:`repro.api.train` can save a final checkpoint on the way out.
+    A BaseException so blanket ``except Exception`` recovery paths never
+    swallow an operator's ctrl-C."""
+
+    def __init__(self, signum: int):
+        super().__init__(f"training interrupted by signal {signum}")
+        self.signum = int(signum)
+
+
 # retried by Retrier; everything else propagates immediately.
 # OSError covers real transient I/O (checkpoint writes on flaky disks).
 RETRYABLE = (TransientError, OSError)
@@ -128,6 +147,13 @@ class FaultPolicy:
     check_finite: bool = False     # sync + guard every step's loss
     max_worker_respawns: int = 8   # dead prefetch workers respawned
     keep_checkpoints: int = 0      # retention (0 = keep all)
+    # process-pool sampler supervision (repro.runtime.procpool): a
+    # worker process whose heartbeat AND claimed build are both older
+    # than worker_heartbeat_s is declared hung (terminate -> kill ->
+    # respawn + requeue); max_proc_respawns caps total process respawns
+    # before the pool aborts with FaultRetriesExceeded
+    worker_heartbeat_s: float = 10.0
+    max_proc_respawns: int = 8
 
     def __post_init__(self):
         if self.on_divergence not in ("raise", "skip_view", "rollback"):
@@ -178,7 +204,14 @@ class FaultInjector:
     """
 
     POINTS = ("view_build", "device_put", "step", "checkpoint_save",
-              "checkpoint_load", "worker_kill", "diverge", "view_hang")
+              "checkpoint_load", "worker_kill", "diverge", "view_hang",
+              # process-level points (repro.runtime.procpool): SIGKILL a
+              # sampler process mid-build, stall one without heartbeats,
+              # flip payload bytes in a shared-memory slot behind the
+              # trainer's back. Thread-mode prefetch maps them to its
+              # closest in-process analogs so one chaos plan covers both
+              # prefetch modes.
+              "proc_kill", "proc_hang", "slot_corrupt")
 
     def __init__(self, plan: Optional[Mapping] = None, seed: int = 0,
                  hang_seconds: float = 30.0):
@@ -233,8 +266,15 @@ class FaultInjector:
         if self.fires(point, key=key):
             n = int(key) if key is not None \
                 else self._counts.get(point, 1) - 1
-            if point == "worker_kill":
+            if point in ("worker_kill", "proc_kill"):
+                # thread-mode analog of SIGKILL: the supervised pool
+                # requeues the claim and respawns the worker
                 raise WorkerKilled(n)
+            if point == "slot_corrupt":
+                # thread-mode analog of a torn shm handoff: transient,
+                # so the retrier rebuilds the (pure) view bit-exactly
+                raise SlotCorruptionError(
+                    f"injected slot corruption for view {n}")
             raise InjectedFault(point, n)
 
     def maybe_hang(self, point: str, key: Optional[int],

@@ -188,6 +188,7 @@ class StreamPrefetcher:
         # shot per injection point (marked at first claim, under the lock)
         self._hang_armed: set = set()
         self._kill_armed: set = set()
+        self._corrupt_armed: set = set()
         self._respawns = 0
         self._worker_seq = itertools.count()
         # materialize the graph's lazy CSC index before the fan-out so
@@ -259,14 +260,29 @@ class StreamPrefetcher:
                 self._hang_armed.add(i)
             if do_hang:
                 # an injected stall: cancellable (wakes on close()), and
-                # the consumer-side watchdog reassigns i meanwhile
+                # the consumer-side watchdog reassigns i meanwhile.
+                # proc_hang is the process-level point's thread analog,
+                # so one chaos plan covers both prefetch modes
                 inj.maybe_hang("view_hang", i, inj.hang_seconds,
+                               self._cancel_evt.wait)
+                inj.maybe_hang("proc_hang", i, inj.hang_seconds,
                                self._cancel_evt.wait)
             with self._cond:
                 do_kill = i not in self._kill_armed
                 self._kill_armed.add(i)
             if do_kill:
                 inj.maybe_fail("worker_kill", key=i)
+                # SIGKILL's thread analog: maybe_fail maps proc_kill to
+                # WorkerKilled (requeue + respawn, same supervision)
+                inj.maybe_fail("proc_kill", key=i)
+            with self._cond:
+                do_corrupt = i not in self._corrupt_armed
+                self._corrupt_armed.add(i)
+            if do_corrupt and inj.fires("slot_corrupt", key=i):
+                # a corrupted handoff's thread analog: the first build
+                # is discarded (as a corrupt slot would be) and the
+                # pure view rebuilt bit-exactly below
+                self._stream.build(self._start + i, builder)
         return rt("view_build", build, key=i, label=f"view[{i}]")
 
     def _work(self):

@@ -10,6 +10,9 @@ of historical layer-(K-1) embeddings so a cache-hit request recomputes
 only its 1-hop top layer instead of the full K-hop cascade.
 """
 from repro.serving.cache import EmbeddingCache
-from repro.serving.server import GNNServer, ServeStats
+from repro.serving.server import (GNNServer, ServeStats,
+                                  ServerClosedError,
+                                  ServerOverloadedError)
 
-__all__ = ["EmbeddingCache", "GNNServer", "ServeStats"]
+__all__ = ["EmbeddingCache", "GNNServer", "ServeStats",
+           "ServerClosedError", "ServerOverloadedError"]

@@ -21,6 +21,7 @@ embedding at *any* version.
 """
 from __future__ import annotations
 
+import threading
 from typing import Optional
 
 import numpy as np
@@ -50,6 +51,12 @@ class EmbeddingCache:
         self.version = 0
         self.hits = 0
         self.misses = 0
+        # every version/table access takes this lock: a param swap's
+        # advance() racing a dispatch thread's coverage()/put() must not
+        # interleave (coverage reads self.version twice — target rows
+        # and neighbor rows — and a bump in between would admit a blend
+        # of old and new embeddings). RLock: coverage() calls fresh().
+        self._lock = threading.RLock()
 
     # -- writes ----------------------------------------------------------------
 
@@ -61,53 +68,61 @@ class EmbeddingCache:
             raise ValueError(
                 f"EmbeddingCache.put: values shape {values.shape} != "
                 f"({len(nodes)}, {self.dim})")
-        self.table[nodes] = values
-        self.entry_version[nodes] = self.version
+        with self._lock:
+            self.table[nodes] = values
+            self.entry_version[nodes] = self.version
 
     def advance(self) -> int:
         """Bump the global version (served params changed). Existing
         entries age by one; with ``staleness=0`` they all stop hitting
         until rewritten."""
-        self.version += 1
-        return self.version
+        with self._lock:
+            self.version += 1
+            return self.version
 
     def invalidate(self, nodes: Optional[np.ndarray] = None) -> None:
         """Drop entries for ``nodes`` (all nodes if None) — the feature
         -update path: stale *inputs* can't be aged back in by any
         staleness bound."""
-        if nodes is None:
-            self.entry_version.fill(-1)
-        else:
-            self.entry_version[np.asarray(nodes)] = -1
+        with self._lock:
+            if nodes is None:
+                self.entry_version.fill(-1)
+            else:
+                self.entry_version[np.asarray(nodes)] = -1
 
     # -- reads -----------------------------------------------------------------
 
     def fresh(self, nodes: np.ndarray) -> np.ndarray:
         """Bool mask: which of ``nodes`` have a usable entry."""
-        ver = self.entry_version[np.asarray(nodes)]
-        return (ver >= 0) & ((self.version - ver) <= self.staleness)
+        with self._lock:
+            ver = self.entry_version[np.asarray(nodes)]
+            return (ver >= 0) & ((self.version - ver) <= self.staleness)
 
     def coverage(self, targets: np.ndarray) -> np.ndarray:
         """Bool mask over ``targets``: target t is *covered* (can be
         served from cache) iff t and every in-neighbor of t are fresh —
         exactly the rows the top GNN layer reads on a 1-hop view.
-        Vectorized over the CSC segments of the whole batch."""
+        Vectorized over the CSC segments of the whole batch. Holds the
+        lock across BOTH freshness reads: an ``advance()`` landing
+        between the target check and the neighbor check would admit a
+        mixed-version hit."""
         targets = np.asarray(targets)
         if len(targets) == 0:
             return np.zeros(0, bool)
         indptr, order = self.g.csc()
         starts, stops = indptr[targets], indptr[targets + 1]
         counts = (stops - starts).astype(np.int64)
-        covered = self.fresh(targets)
-        total = int(counts.sum())
-        if total == 0:
-            return covered
-        # gather every target's in-edge ids in one flat sweep
-        flat = np.repeat(starts, counts) + (
-            np.arange(total) - np.repeat(np.cumsum(counts) - counts,
-                                         counts))
-        srcs = self.g.src[order[flat]]
-        stale = ~self.fresh(srcs)
+        with self._lock:
+            covered = self.fresh(targets)
+            total = int(counts.sum())
+            if total == 0:
+                return covered
+            # gather every target's in-edge ids in one flat sweep
+            flat = np.repeat(starts, counts) + (
+                np.arange(total) - np.repeat(np.cumsum(counts) - counts,
+                                             counts))
+            srcs = self.g.src[order[flat]]
+            stale = ~self.fresh(srcs)
         # per-target stale count via segment sums (reduceat needs
         # non-empty segments; empty ones contribute zero by construction)
         seg = np.zeros(len(targets), np.int64)

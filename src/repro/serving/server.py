@@ -44,6 +44,16 @@ from repro.graph.csr import Graph
 from repro.serving.cache import EmbeddingCache
 
 
+class ServerClosedError(RuntimeError):
+    """The server was closed: the request was refused at the door, or it
+    was still queued when ``close()`` failed the pending futures."""
+
+
+class ServerOverloadedError(RuntimeError):
+    """The bounded request queue is full — the server sheds load instead
+    of buffering unboundedly (clients should back off and retry)."""
+
+
 @dataclass
 class ServeStats:
     """Per-stage timing + cache/batching counters; ``summary()`` folds in
@@ -128,12 +138,18 @@ class GNNServer:
                  buckets: Optional[BucketSpec] = None,
                  cache: object = True, staleness: int = 0,
                  max_batch: int = 32, max_wait_ms: float = 2.0,
-                 gcn_norm: bool = True, slots: int = 2):
+                 gcn_norm: bool = True, slots: int = 2,
+                 max_queue: Optional[int] = None):
         self.model = model
         self.params = params
         self.g = g
         self.max_batch = max(1, int(max_batch))
         self.max_wait_s = max(0.0, float(max_wait_ms)) / 1e3
+        # bounded admission: a stalled device path must shed load with a
+        # typed error, not buffer requests (and their client threads)
+        # without limit
+        self.max_queue = (8 * self.max_batch if max_queue is None
+                          else max(1, int(max_queue)))
         backend = getattr(model, "aggregate_backend", "reference")
         csc = backend == "csc"
         self.buckets = buckets or BucketSpec.for_graph(g)
@@ -190,6 +206,7 @@ class GNNServer:
         self._cv = threading.Condition()
         self._dispatcher: Optional[threading.Thread] = None
         self._running = False
+        self._closed = False
 
     # -- the device paths ------------------------------------------------------
 
@@ -226,6 +243,8 @@ class GNNServer:
         """Serve one batch synchronously: returns ``(len(node_ids),
         num_classes)`` logits, one row per requested node (duplicates
         allowed)."""
+        if self._closed:
+            raise ServerClosedError("GNNServer is closed")
         nodes = np.asarray(node_ids, np.int64)
         if nodes.ndim != 1 or len(nodes) == 0:
             raise ValueError("submit() expects a non-empty 1-D sequence "
@@ -269,6 +288,9 @@ class GNNServer:
         concurrently. A batch fires when ``max_batch`` requests are
         queued or the oldest has waited ``max_wait_ms``."""
         with self._cv:
+            if self._closed:
+                raise ServerClosedError(
+                    "GNNServer is closed — build a new server")
             if self._running:
                 return self
             self._running = True
@@ -279,6 +301,9 @@ class GNNServer:
         return self
 
     def stop(self) -> None:
+        """Retire the dispatcher after *draining*: every already-queued
+        request is still served. (:meth:`close` is the hard variant —
+        queued requests are failed, not served.)"""
         with self._cv:
             self._running = False
             self._cv.notify_all()
@@ -286,15 +311,43 @@ class GNNServer:
             self._dispatcher.join()
             self._dispatcher = None
 
+    def close(self) -> None:
+        """Shut down with drain semantics: stop accepting new requests
+        (they get :class:`ServerClosedError`), let the batch already
+        being served flush its responses, fail every still-queued
+        request's future with :class:`ServerClosedError`, and retire the
+        dispatcher. Idempotent; the server cannot be restarted."""
+        with self._cv:
+            self._closed = True
+            self._running = False
+            pending, self._queue = self._queue, []
+            self._cv.notify_all()
+        err = ServerClosedError(
+            "GNNServer closed while the request was queued")
+        for p in pending:
+            p.error = err
+            p.done.set()
+        if self._dispatcher is not None:
+            self._dispatcher.join()     # flushes the in-flight batch
+            self._dispatcher = None
+
     def request(self, node_id: int,
                 timeout: Optional[float] = 30.0) -> np.ndarray:
         """Enqueue one node-id request and block until its logits are
-        ready (the concurrent client API; requires :meth:`start`)."""
+        ready (the concurrent client API; requires :meth:`start`).
+        Raises :class:`ServerOverloadedError` when the bounded queue is
+        full and :class:`ServerClosedError` after :meth:`close`."""
         with self._cv:
+            if self._closed:
+                raise ServerClosedError("GNNServer is closed")
             if not self._running:
                 raise RuntimeError("GNNServer.request() needs start() — "
                                    "or use submit() for synchronous "
                                    "batches")
+            if len(self._queue) >= self.max_queue:
+                raise ServerOverloadedError(
+                    f"request queue full ({self.max_queue} pending) — "
+                    "back off and retry")
             p = _Pending(node_id)
             self._queue.append(p)
             self._cv.notify_all()
@@ -370,10 +423,16 @@ class GNNServer:
     def update_params(self, params) -> None:
         """Swap the served params (an online fine-tune step landed). The
         cache ages one version: with ``staleness=0`` every pre-update
-        embedding stops hitting immediately."""
-        self.params = params
-        if self.cache is not None:
-            self.cache.advance()
+        embedding stops hitting immediately.
+
+        Holds the serve lock so the swap+advance pair is atomic with
+        respect to a batch being served: every response is computed
+        entirely under one ``(params, cache version)`` — never a blend
+        of old cached rows with a new top layer."""
+        with self._serve_lock:
+            self.params = params
+            if self.cache is not None:
+                self.cache.advance()
 
     def update_features(self, nodes: np.ndarray,
                         values: np.ndarray) -> None:
@@ -382,19 +441,23 @@ class GNNServer:
         their out-neighbors' (their h^{K-1} aggregates the updated
         features within K-1 hops — conservatively, every node whose
         1..(K-1)-hop in-neighborhood touches ``nodes``; for the common
-        K=2 serving setup that is exactly the out-neighbors)."""
+        K=2 serving setup that is exactly the out-neighbors).
+
+        Holds the serve lock — a batch mid-flight must not see half the
+        feature write or a feature/invalidation mismatch."""
         nodes = np.asarray(nodes, np.int64)
-        self.g.node_features[nodes] = values
-        # the graph's cached strategy-invariant base blocks hold a COPY
-        # of the features (GraphView.as_block / offline infer read them)
-        self.g._base_blocks.clear()
-        if self.cache is None:
-            return
-        stale = [nodes]
-        frontier = nodes
-        for _ in range(self.model.K - 1):
-            # out-neighbors of the frontier: edges whose src is stale
-            sel = np.isin(self.g.src, frontier)
-            frontier = np.unique(self.g.dst[sel])
-            stale.append(frontier)
-        self.cache.invalidate(np.unique(np.concatenate(stale)))
+        with self._serve_lock:
+            self.g.node_features[nodes] = values
+            # the graph's cached strategy-invariant base blocks hold a
+            # COPY of the features (GraphView.as_block / offline infer)
+            self.g._base_blocks.clear()
+            if self.cache is None:
+                return
+            stale = [nodes]
+            frontier = nodes
+            for _ in range(self.model.K - 1):
+                # out-neighbors of the frontier: edges whose src is stale
+                sel = np.isin(self.g.src, frontier)
+                frontier = np.unique(self.g.dst[sel])
+                stale.append(frontier)
+            self.cache.invalidate(np.unique(np.concatenate(stale)))

@@ -223,6 +223,37 @@ def test_srclint_silent_except_waiver_on_pass_line():
     assert lint_source(src, "fixture.py") == []
 
 
+def test_srclint_unjoined_process_flagged():
+    src = ("import multiprocessing as mp\n"
+           "def launch(fn):\n"
+           "    p = mp.Process(target=fn)\n"
+           "    p.start()\n"
+           "    return p\n")
+    findings = lint_source(src, "fixture.py")
+    assert _rule_ids(findings) == {"src.unjoined-process"}
+    # any join/terminate/kill path anywhere in the file clears it
+    supervised = src + ("def close(p):\n"
+                        "    p.terminate()\n")
+    assert lint_source(supervised, "fixture.py") == []
+    joined = src + ("def wait(p):\n"
+                    "    p.join()\n")
+    assert lint_source(joined, "fixture.py") == []
+    # bare-name Process() (from-import) is caught too
+    bare = ("from multiprocessing import Process\n"
+            "def launch(fn):\n"
+            "    Process(target=fn).start()\n")
+    assert _rule_ids(lint_source(bare, "fixture.py")) == {
+        "src.unjoined-process"}
+
+
+def test_srclint_unjoined_process_waiver():
+    src = ("import multiprocessing as mp\n"
+           "def launch(fn):\n"
+           "    p = mp.Process(target=fn)  # lint: waive=src.unjoined-process\n"
+           "    p.start()\n")
+    assert lint_source(src, "fixture.py") == []
+
+
 # ---------------------------------------------------------------------------
 # zero findings on the real thing
 # ---------------------------------------------------------------------------

@@ -9,6 +9,7 @@ client-count invariance, the train -> checkpoint -> serve round trip —
 leans on that.
 """
 import threading
+import time
 
 import jax
 import numpy as np
@@ -146,6 +147,117 @@ def test_k1_model_has_no_cache(trained):
     assert srv.cache is None
     out = srv.submit(np.arange(5))
     assert out.shape == (5, int(r.graph.labels.max()) + 1)
+    srv.assert_compiled_per_bucket()
+
+
+def test_close_fails_queued_requests_and_refuses_new(trained):
+    from repro.serving import ServerClosedError
+    # a huge deadline + batch keeps everything queued until close()
+    srv = _server(trained, max_batch=64, max_wait_ms=10_000.0).start()
+    errs, n = [], 6
+
+    def client(i):
+        try:
+            srv.request(i)
+        except Exception as e:  # noqa: BLE001 — collected for assertion
+            errs.append(e)
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(n)]
+    for t in threads:
+        t.start()
+    deadline = time.monotonic() + 5.0
+    while len(srv._queue) < n:
+        assert time.monotonic() < deadline
+    srv.close()
+    for t in threads:
+        t.join()
+    # every queued future failed typed — none served, none stuck
+    assert len(errs) == n
+    assert all(isinstance(e, ServerClosedError) for e in errs)
+    # and the server stays closed on every entry point
+    with pytest.raises(ServerClosedError):
+        srv.request(0)
+    with pytest.raises(ServerClosedError):
+        srv.submit([0])
+    with pytest.raises(ServerClosedError):
+        srv.start()
+    srv.close()                             # idempotent
+
+
+def test_bounded_queue_sheds_load_typed(trained):
+    from repro.serving import ServerClosedError, ServerOverloadedError
+    srv = _server(trained, max_batch=64, max_wait_ms=10_000.0,
+                  max_queue=2).start()
+    errs = []
+
+    def client(i):
+        try:
+            srv.request(i)
+        except Exception as e:  # noqa: BLE001 — collected for assertion
+            errs.append(e)
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(2)]
+    try:
+        for t in threads:
+            t.start()
+        deadline = time.monotonic() + 5.0
+        while len(srv._queue) < 2:
+            assert time.monotonic() < deadline
+        with pytest.raises(ServerOverloadedError, match="back off"):
+            srv.request(2)
+    finally:
+        srv.close()
+        for t in threads:
+            t.join()
+    # the two admitted requests were failed typed at close, not leaked
+    assert len(errs) == 2
+    assert all(isinstance(e, ServerClosedError) for e in errs)
+
+
+def test_param_swap_hammer_never_blends(trained):
+    """Concurrent update_params swaps + submits: every response equals
+    the oracle for params A or for params B — never a mix of cached
+    rows from one version with the top layer of the other."""
+    rng = np.random.default_rng(5)
+    targets = rng.choice(trained.graph.num_nodes, 10, replace=False)
+    params_a = trained.params
+    params_b = jax.tree_util.tree_map(lambda x: x + 1e-2, params_a)
+    oracle = _server(trained, cache=False)
+    out_a = oracle.submit(targets)
+    oracle.update_params(params_b)
+    out_b = oracle.submit(targets)
+    assert np.abs(out_a - out_b).max() > 0   # the versions are tellable
+
+    srv = _server(trained)
+    srv.submit(targets)                      # warm the cache under A
+    stop = threading.Event()
+    mismatches = []
+
+    def swapper():
+        flip = True
+        while not stop.is_set():
+            srv.update_params(params_b if flip else params_a)
+            flip = not flip
+
+    def hammer():
+        for _ in range(25):
+            out = srv.submit(targets)
+            if not (np.array_equal(out, out_a)
+                    or np.array_equal(out, out_b)):
+                mismatches.append(out)
+
+    sw = threading.Thread(target=swapper)
+    hs = [threading.Thread(target=hammer) for _ in range(3)]
+    sw.start()
+    for h in hs:
+        h.start()
+    for h in hs:
+        h.join()
+    stop.set()
+    sw.join()
+    assert not mismatches, "served a blend of two param versions"
     srv.assert_compiled_per_bucket()
 
 
